@@ -1,0 +1,46 @@
+"""Paper Tables 4–5: max implementable oscillators + resource usage on a
+Zynq-7020 at 5 weight bits / 4 phase bits, and the 10.5× capacity claim."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import hardware_model as hw
+
+PAPER = {
+    "recurrent": {
+        "max_n": 48, "lut": 49441, "ff": 13906, "dsp": 0, "bram": 0,
+        "f_osc_hz": 625e3,
+    },
+    "hybrid": {
+        "max_n": 506, "lut": 41547, "ff": 44748, "dsp": 220, "bram": 140,
+        "f_osc_hz": 6.1e3,
+    },
+}
+
+
+def main() -> List[Dict]:
+    rows = []
+    print("# paper tables 4-5: capacity + resources at max N (Zynq-7020, 5w/4p bits)")
+    print("arch,metric,model,paper")
+    for arch in ("recurrent", "hybrid"):
+        n_max = hw.max_oscillators(arch)
+        res = hw.resources(arch, n_max)
+        f = hw.oscillation_frequency(arch, n_max)
+        row = {
+            "arch": arch, "max_n": n_max, **res, "f_osc_hz": f,
+            "paper": PAPER[arch],
+        }
+        rows.append(row)
+        print(f"{arch},max_oscillators,{n_max},{PAPER[arch]['max_n']}")
+        for k in ("lut", "ff", "dsp", "bram"):
+            print(f"{arch},{k},{res[k]},{PAPER[arch][k]}")
+        print(f"{arch},f_osc_hz,{f:.3g},{PAPER[arch]['f_osc_hz']:.3g}")
+    ratio = rows[1]["max_n"] / rows[0]["max_n"]
+    print(f"# capacity ratio hybrid/recurrent: {ratio:.1f}x (paper: 10.5x)")
+    rows.append({"capacity_ratio": round(ratio, 2), "paper_ratio": 10.5})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

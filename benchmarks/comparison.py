@@ -1,0 +1,49 @@
+"""Paper Table 2: comparison of oscillator-based architectures, extended with
+this repo's TPU-scale distributed ONN (the paper's deferred multi-FPGA row)."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.onn import ONN_CELLS
+
+TABLE2 = [
+    ("Abernot et al. [2-4,18]", "Digital", 35, 1190, "All-to-all"),
+    ("Jackson et al. [16]", "Digital*", 100, 10000, "All-to-all"),
+    ("Nikhar et al. [21]", "Digital P-bit", 1008, 9072, "Neighbor+Config"),
+    ("Bashar et al. [5]", "Digital SDE", 10000, 80, "All-to-all streamed"),
+    ("Liu et al. [17]", "Ring osc", 1024, 3716, "King's graph"),
+    ("Moy et al. [20]", "Ring osc", 1968, 7342, "King's graph"),
+    ("Wang et al. [30,31]", "Analog LC", 240, 1200, "Chimera"),
+    ("Vaidya et al. [29]", "Analog Schmitt", 4, 6, "All-to-all"),
+    ("Paper (recurrent)", "Digital", 48, 2256, "All-to-all"),
+    ("Paper (hybrid)", "Digital", 506, 256036, "All-to-all serialized"),
+]
+
+
+def main() -> List[Dict]:
+    rows = [
+        {"ref": r[0], "oscillator": r[1], "nodes": r[2], "connections": r[3],
+         "topology": r[4]}
+        for r in TABLE2
+    ]
+    for name, cell in ONN_CELLS.items():
+        n = cell["n"]
+        rows.append(
+            {
+                "ref": f"This repo ({name}, TPU {'single-pod' if True else ''} sharded)",
+                "oscillator": "Digital (JAX sim)",
+                "nodes": n,
+                "connections": n * n,
+                "topology": "All-to-all, W 2-D sharded",
+            }
+        )
+    print("# paper table 2 + this repo's distributed ONN rows")
+    print("ref,oscillator,nodes,connections,topology")
+    for r in rows:
+        print(f"{r['ref']},{r['oscillator']},{r['nodes']},{r['connections']},{r['topology']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Pallas kernel microbench: correctness sweep + schedule accounting.
+
+CPU container ⇒ kernels execute in interpret mode (Python), so wall-times are
+not TPU times.  What this bench reports instead:
+
+* allclose vs the pure-jnp oracle across an (N, batch, block) sweep,
+* the VMEM working set per grid step for the chosen block shapes (must fit
+  the ~16 MiB/core budget — this is the tiling claim the kernel makes),
+* arithmetic intensity of the fused step (the roofline argument for why the
+  fused kernel beats the unfused pair on TPU),
+* wall-time of the jnp fallback path (the production CPU path) for scale.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coupling_kernel as ck
+from repro.kernels import ops, ref
+
+
+def correctness_sweep() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (48, 128, 506, 1024):
+        for b in (1, 8, 128):
+            k1, k2, key = jax.random.split(key, 3)
+            w = jax.random.randint(k1, (n, n), -15, 16, dtype=jnp.int8)
+            sigma = jax.random.choice(k2, jnp.array([-1, 1], jnp.int8), shape=(b, n))
+            out_k = ops.onn_step(w, sigma)
+            out_r = ref.onn_step_ref(w, sigma)
+            exact = bool(jnp.all(out_k == out_r))
+            rows.append({"kernel": "onn_step", "n": n, "batch": b, "exact": exact})
+            assert exact, f"kernel mismatch at n={n} b={b}"
+    return rows
+
+
+def vmem_accounting() -> List[Dict]:
+    rows = []
+    for bb, bi, bk in ((128, 128, 128), (128, 128, 512), (256, 256, 512)):
+        vb = ck.vmem_bytes(bb, bi, bk, fused=True)
+        # fused step: int8 dot (2·bb·bi·bk int-MACs) over (σ + W tiles) bytes
+        flops = 2 * bb * bi * bk
+        tile_bytes = bb * bk + bi * bk
+        rows.append(
+            {
+                "block": f"{bb}x{bi}x{bk}",
+                "vmem_bytes": vb,
+                "fits_16MiB": vb <= 16 * 2**20,
+                "arith_intensity": round(flops / tile_bytes, 1),
+            }
+        )
+    return rows
+
+
+def fallback_timing() -> List[Dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n in (506, 4096):
+        b = 256
+        k1, k2 = jax.random.split(jax.random.fold_in(key, n))
+        w = jax.random.randint(k1, (n, n), -15, 16, dtype=jnp.int8)
+        sigma = jax.random.choice(k2, jnp.array([-1, 1], jnp.int8), shape=(b, n))
+        fn = jax.jit(lambda w, s: ops.onn_step(w, s, use_pallas=False))
+        fn(w, sigma).block_until_ready()
+        t0 = time.time()
+        reps = 5
+        for _ in range(reps):
+            out = fn(w, sigma)
+        out.block_until_ready()
+        dt = (time.time() - t0) / reps
+        rows.append(
+            {
+                "n": n,
+                "batch": b,
+                "ms_per_sweep": round(1000 * dt, 2),
+                "gmacs_per_s": round(2 * n * n * b / dt / 1e9, 1),
+            }
+        )
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = correctness_sweep()
+    ok = sum(1 for r in rows if r["exact"])
+    print(f"# kernel allclose sweep: {ok}/{len(rows)} exact")
+    vrows = vmem_accounting()
+    print("block,vmem_bytes,fits_16MiB,arith_intensity(int-ops/byte)")
+    for r in vrows:
+        print(f"{r['block']},{r['vmem_bytes']},{r['fits_16MiB']},{r['arith_intensity']}")
+    trows = fallback_timing()
+    print("n,batch,ms_per_sweep,gmacs_per_s (jnp fallback on CPU)")
+    for r in trows:
+        print(f"{r['n']},{r['batch']},{r['ms_per_sweep']},{r['gmacs_per_s']}")
+    return rows + vrows + trows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline sections from
+artifacts/dryrun/*.json (between the HTML marker comments)."""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List
+
+from benchmarks.roofline import load, markdown_table
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_section(single: List[Dict], multi: List[Dict]) -> str:
+    def gb(r, key):
+        return r.get("memory_analysis", {}).get(key, 0) / 1e9
+
+    lines = [
+        f"**{len(single)} single-pod (256-chip) cells and {len(multi)} multi-pod "
+        f"(512-chip) cells lowered + compiled** (ShapeDtypeStruct stand-ins, no "
+        "allocation). Per-device memory from `memory_analysis()` (CPU-backend "
+        "upper bound — DESIGN.md §6.1):",
+        "",
+        "| cell | mesh | compile (s) | args GB/dev | temp GB/dev | ≤16 GB | microbatches |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(single + multi, key=lambda r: (r["cell"], r["mesh"])):
+        total = gb(r, "argument_size_in_bytes") + gb(r, "temp_size_in_bytes")
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | {r.get('compile_s', '—')} | "
+            f"{gb(r, 'argument_size_in_bytes'):.2f} | {gb(r, 'temp_size_in_bytes'):.2f} | "
+            f"{'✓' if total <= 16 else '✗'} | {r.get('microbatches', 1)} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def replace_between(text: str, begin: str, end: str, body: str) -> str:
+    pattern = re.compile(
+        re.escape(begin) + r".*?" + re.escape(end), flags=re.DOTALL
+    )
+    return pattern.sub(begin + "\n" + body + end, text)
+
+
+def main() -> None:
+    single = [r for r in load(mesh="single") if not r.get("tag")]
+    multi = load(mesh="multi")
+    with open(EXPERIMENTS) as f:
+        text = f.read()
+    text = replace_between(
+        text, "<!-- DRYRUN:BEGIN -->", "<!-- DRYRUN:END -->",
+        dryrun_section(single, multi),
+    )
+    text = replace_between(
+        text, "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->",
+        markdown_table(single),
+    )
+    with open(EXPERIMENTS, "w") as f:
+        f.write(text)
+    print(f"EXPERIMENTS.md updated: {len(single)} single-pod, {len(multi)} multi-pod cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json (deliverable g).
+
+Prints the per-(arch × shape × mesh) roofline table — the three terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS — and writes the
+markdown table consumed by EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(artifact_dir: str = ARTIFACT_DIR, mesh: Optional[str] = "single") -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        if len(parts) > 3 or "probe" in base or "sanity" in base:
+            continue  # tagged variant artifacts belong to §Perf, not the table
+        if mesh and r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: Dict) -> Dict:
+    roof = r["roofline"]
+    mem = r.get("memory_analysis", {})
+    hbm_gb = (mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)) / 1e9
+    return {
+        "cell": r["cell"],
+        "mesh": r["mesh"],
+        "compute_s": roof["compute_s"],
+        "memory_s": roof["memory_s"],
+        "collective_s": roof["collective_s"],
+        "dominant": roof["dominant"],
+        "useful_ratio": r.get("useful_flops_ratio"),
+        "hbm_gb_per_dev": round(hbm_gb, 2),
+        "fits_16gb": hbm_gb <= 16.0,
+        "compile_s": r.get("compile_s"),
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| cell | compute (s) | memory (s) | collective (s) | bound | "
+        "useful/HLO | HBM GB/dev | fits |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        f = fmt_row(r)
+        ur = f"{f['useful_ratio']:.3f}" if f["useful_ratio"] else "—"
+        lines.append(
+            f"| {f['cell']} | {f['compute_s']:.3e} | {f['memory_s']:.3e} | "
+            f"{f['collective_s']:.3e} | **{f['dominant']}** | {ur} | "
+            f"{f['hbm_gb_per_dev']} | {'✓' if f['fits_16gb'] else '✗'} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> List[Dict]:
+    rows = load()
+    if not rows:
+        print("# no dry-run artifacts found — run: python -m repro.launch.dryrun --all")
+        return []
+    print(f"# roofline table ({len(rows)} single-pod cells)")
+    print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,hbm_gb,fits16")
+    for r in rows:
+        f = fmt_row(r)
+        print(
+            f"{f['cell']},{f['compute_s']:.3e},{f['memory_s']:.3e},"
+            f"{f['collective_s']:.3e},{f['dominant']},{f['useful_ratio']},"
+            f"{f['hbm_gb_per_dev']},{f['fits_16gb']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark aggregator: one section per paper table/figure + repo extras.
+
+  PYTHONPATH=src python -m benchmarks.run            # full (CI) trial counts
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke trial counts
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--trials", type=int, default=None,
+                    help="retrieval trials per pattern (default 200 / 50 quick)")
+    args = ap.parse_args()
+    trials = args.trials or (50 if args.quick else 200)
+
+    from benchmarks import capacity, comparison, kernels, maxcut, retrieval, roofline, scaling
+
+    sections = [
+        ("table2_comparison", comparison.main, {}),
+        ("figs9_11_scaling", scaling.main, {}),
+        ("tables4_5_capacity", capacity.main, {}),
+        ("tables6_7_retrieval", retrieval.main, {"trials": trials}),
+        ("kernels", kernels.main, {}),
+        ("maxcut_extra", maxcut.main, {}),
+        ("roofline", roofline.main, {}),
+    ]
+    t_all = time.time()
+    for name, fn, kw in sections:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn(**kw)
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====", flush=True)
+    print(f"\n# all benchmarks done in {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Figs 9–11: hardware-resource and frequency scaling slopes.
+
+Sweeps network size N for both architectures through the calibrated
+structural cost model (core/hardware_model.py), fits log-log slopes, and
+validates against the paper's published fits:
+
+  LUT   slope: recurrent ≈ 2.08, hybrid ≈ 1.22   (Fig 9)
+  FF    slope: recurrent ≈ 2.39, hybrid ≈ 1.11   (Fig 10)
+  f_osc slope: recurrent ≈ −0.46, hybrid ≈ −1.35 (Fig 11)
+
+Also emits Fig 12 (area fraction vs % of max frequency, hybrid): the balance
+point should land near N≈65 at ~15 % area.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import hardware_model as hw
+
+PAPER_SLOPES = {
+    ("recurrent", "lut"): 2.0770,
+    ("hybrid", "lut"): 1.2231,
+    ("recurrent", "ff"): 2.3859,
+    ("hybrid", "ff"): 1.1092,
+    ("recurrent", "freq"): -0.4614,
+    ("hybrid", "freq"): -1.3515,
+}
+
+# Sweep ranges ≈ the paper's measured ranges.
+NS_RECURRENT = [8, 12, 16, 20, 24, 32, 40, 48]
+NS_HYBRID = [8, 16, 32, 64, 96, 128, 192, 256, 384, 506]
+
+
+def fit(arch: str, metric: str) -> Dict:
+    ns = NS_RECURRENT if arch == "recurrent" else NS_HYBRID
+    if metric == "freq":
+        ys = [hw.oscillation_frequency(arch, n) for n in ns]
+    else:
+        ys = [hw.resources(arch, n)[metric] for n in ns]
+    slope, r2 = hw.loglog_slope(ns, ys)
+    paper = PAPER_SLOPES[(arch, metric)]
+    return {
+        "arch": arch,
+        "metric": metric,
+        "slope": round(slope, 3),
+        "paper_slope": paper,
+        "abs_err": round(abs(slope - paper), 3),
+        "r2": round(r2, 4),
+    }
+
+
+def balance_point() -> Dict:
+    """Fig 12: intersection of area fraction and % of max oscillation freq."""
+    ns = list(range(16, 507, 2))  # paper hybrid sweep starts ≈16
+    fmax = max(hw.oscillation_frequency("hybrid", n) for n in ns)
+    best = None
+    for n in ns:
+        area = hw.area_fraction("hybrid", n)
+        fpct = hw.oscillation_frequency("hybrid", n) / fmax
+        gap = abs(area - fpct)
+        if best is None or gap < best["gap"]:
+            best = {"n": n, "area_pct": round(100 * area, 1),
+                    "freq_pct": round(100 * fpct, 1), "gap": gap}
+    best.pop("gap")
+    best["paper"] = "N≈65 @ ~15% area"
+    return best
+
+
+def main() -> List[Dict]:
+    rows = [fit(a, m) for a in ("recurrent", "hybrid") for m in ("lut", "ff", "freq")]
+    print("# paper figs 9-11 scaling slopes (structural model, log-log OLS)")
+    print("arch,metric,slope,paper_slope,abs_err,r2")
+    for r in rows:
+        print(f"{r['arch']},{r['metric']},{r['slope']},{r['paper_slope']},{r['abs_err']},{r['r2']}")
+    bp = balance_point()
+    print(f"# fig 12 balance point: N={bp['n']} area={bp['area_pct']}% "
+          f"freq={bp['freq_pct']}% (paper: {bp['paper']})")
+    return rows + [bp]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Oscillatory Ising machine: solve max-cut with the ONN (paper §2.2).
+
+    PYTHONPATH=src python examples/maxcut_ising.py [--n 64]
+
+Embeds an Erdős–Rényi graph as antiferromagnetic couplings (J = −A,
+quantized to 5 bits), anneals with asynchronous ONN sweeps, and reports the
+cut found vs the random-cut baseline |E|/2.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ising import cut_value_exact, random_graph, solve_maxcut
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--p", type=float, default=0.5)
+    ap.add_argument("--sweeps", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(args.seed)
+    adj = random_graph(key, args.n, args.p)
+    edges = float(jnp.sum(jnp.triu(adj, 1)))
+    res = solve_maxcut(adj, jax.random.fold_in(key, 1), sweeps=args.sweeps)
+
+    print(f"G({args.n}, {args.p}): |E| = {int(edges)}")
+    print(f"cut found:       {int(res.cut_value)}")
+    print(f"random baseline: {edges / 2:.0f}")
+    print(f"ratio:           {float(res.cut_value) / (edges / 2):.3f}")
+    part = jnp.where(res.sigma > 0)[0]
+    print(f"partition sizes: {int(part.shape[0])} / {args.n - int(part.shape[0])}")
+    trace = [int(v) for v in res.trace[:: max(1, args.sweeps // 8)]]
+    print(f"best-cut trace:  {trace}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""End-to-end LM training driver with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-1.5b] [--steps 200]
+
+Trains a reduced-config assigned architecture for a few hundred steps on the
+deterministic synthetic stream, demonstrating:
+  * loss actually decreasing (the stream has learnable n-gram structure),
+  * async checkpointing + auto-resume (the run is interrupted halfway and
+    restarted — the loss curve continues seamlessly),
+  * the straggler monitor and heartbeat wired into the loop.
+"""
+
+import argparse
+import shutil
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    half = args.steps // 2
+    try:
+        print(f"=== phase 1: train to step {half}, checkpointing ===")
+        out1 = train(
+            args.arch, reduced=True, steps=half, batch=args.batch,
+            seq_len=args.seq, ckpt_dir=ckpt_dir, ckpt_every=max(half // 2, 1),
+        )
+        print(f"=== phase 2: resume from checkpoint → step {args.steps} ===")
+        out2 = train(
+            args.arch, reduced=True, steps=args.steps, batch=args.batch,
+            seq_len=args.seq, ckpt_dir=ckpt_dir, ckpt_every=max(half // 2, 1),
+        )
+        first, last = out1["first_loss"], out2["last_loss"]
+        print(f"\nloss {first:.4f} → {last:.4f} over {args.steps} steps "
+              f"(resumed at {out2['final_step'] - (args.steps - half)})")
+        assert last < first, "loss did not decrease"
+        print("OK: loss decreased across a checkpoint/restart boundary")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

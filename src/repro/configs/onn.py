@@ -1,0 +1,36 @@
+"""ONN configurations: the paper's design points + the beyond-paper scale-up.
+
+* ``ONN_RECURRENT_48``  — the recurrent architecture at its Zynq-7020 maximum
+  (48 oscillators, 5 weight bits, 4 phase bits; paper Table 5).
+* ``ONN_HYBRID_506``    — the hybrid architecture at its maximum (506
+  oscillators — the paper's headline result).
+* ``ONN_LARGE_*``       — the multi-pod scale-up the paper defers to future
+  work ("clustering multiple FPGAs"): the coupling matrix is 2-D sharded over
+  the production mesh.  N=131072 ⇒ W is 17 GB int8, 67 MB/device at 256 chips.
+
+Dry-run cells (see launch/dryrun.py): the ONN phase-update sweep is lowered
+on the production mesh with W sharded P("model", "data") and the spin batch
+replicated per row shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.onn import ONNConfig
+
+ONN_RECURRENT_48 = ONNConfig(n=48, architecture="recurrent", mode="functional")
+ONN_HYBRID_506 = ONNConfig(n=506, architecture="hybrid", mode="functional")
+
+# Beyond-paper distributed scale-up: batched retrieval sweeps at large N.
+ONN_LARGE_N = 131072
+ONN_LARGE_BATCH = 1024
+ONN_LARGE = ONNConfig(n=ONN_LARGE_N, architecture="hybrid", mode="functional")
+
+# Paper-scale batched cell (fits one chip; baseline for the sharded variant).
+ONN_PAPER_BATCH = 1024
+
+ONN_CELLS = {
+    "onn_506": {"n": 506, "batch": ONN_PAPER_BATCH, "cycles": 32},
+    "onn_131072": {"n": ONN_LARGE_N, "batch": ONN_LARGE_BATCH, "cycles": 32},
+}

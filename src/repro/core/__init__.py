@@ -1,0 +1,12 @@
+# The paper's primary contribution: digital ONN architectures (recurrent vs
+# hybrid serialized coupling), learning rules, quantization, energy model,
+# Ising-machine embedding, and the FPGA hardware-scaling cost model.
+from repro.core.onn import ONN, ONNConfig, ONNResult, async_sweep  # noqa: F401
+from repro.core.quantization import (  # noqa: F401
+    QuantizedWeights,
+    quantize_weights,
+    pack_int4,
+    unpack_int4,
+)
+from repro.core.learning import diederich_opper_i, hebbian  # noqa: F401
+from repro.core.energy import hamiltonian, is_local_minimum  # noqa: F401

@@ -1,0 +1,91 @@
+"""Coupling-element arithmetic: parallel (recurrent) vs serialized (hybrid).
+
+Paper §2.3 / §3.  The recurrent architecture computes every oscillator's
+weighted input sum with a combinational adder tree (N² adders); the hybrid
+architecture serializes each row through a single MAC on a fast clock,
+streaming weights from addressable memory.  Both compute *exactly* the same
+integer sum — the architectures differ in hardware cost and timing, not in
+arithmetic — and the implementations below are the executable versions of
+both schedules.  The blocked/chunked serial schedule is the schedule the
+Pallas TPU kernel (``repro.kernels``) uses: the paper's BRAM streaming maps
+to HBM→VMEM block streaming.
+
+All sums are exact int32 (see ``quantization.accumulator_bits``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _check(w: jax.Array, sigma: jax.Array) -> None:
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        raise ValueError(f"coupling matrix must be square, got {w.shape}")
+    if sigma.shape[-1] != w.shape[1]:
+        raise ValueError(f"spin vector {sigma.shape} incompatible with {w.shape}")
+
+
+def weighted_sum_parallel(w: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Recurrent-architecture weighted sum: S_i = Σ_j W_ij σ_j, all at once.
+
+    ``w``: (N, N) int8, ``sigma``: (..., N) int8 in {−1, +1}.  Returns
+    (..., N) int32.  The combinational adder tree of Fig. 4 — one fully
+    parallel contraction.
+    """
+    _check(w, sigma)
+    return jnp.einsum(
+        "ij,...j->...i",
+        w.astype(jnp.int32),
+        sigma.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def weighted_sum_serial(w: jax.Array, sigma: jax.Array, chunk: int = 1) -> jax.Array:
+    """Hybrid-architecture weighted sum: serialized accumulation (Fig. 5).
+
+    Accumulates over inputs ``chunk`` at a time with a ``lax.scan`` — the
+    executable model of the fast-clock counter + single MAC (``chunk=1``) or
+    of the blocked VMEM streaming schedule of the TPU kernel (``chunk>1``).
+    Bit-exact to :func:`weighted_sum_parallel` by integer associativity.
+    """
+    _check(w, sigma)
+    n = w.shape[1]
+    if n % chunk != 0:
+        raise ValueError(f"chunk {chunk} must divide N={n}")
+    steps = n // chunk
+    # (steps, N, chunk) weight blocks; (steps, ..., chunk) spin blocks.
+    w_blocks = w.astype(jnp.int32).reshape(n, steps, chunk).transpose(1, 0, 2)
+    s_blocks = jnp.moveaxis(
+        sigma.astype(jnp.int32).reshape(*sigma.shape[:-1], steps, chunk), -2, 0
+    )
+
+    def body(acc, blocks):
+        wb, sb = blocks  # (N, chunk), (..., chunk)
+        acc = acc + jnp.einsum("ic,...c->...i", wb, sb, preferred_element_type=jnp.int32)
+        return acc, None
+
+    init = jnp.zeros((*sigma.shape[:-1], n), dtype=jnp.int32)
+    acc, _ = jax.lax.scan(body, init, (w_blocks, s_blocks))
+    return acc
+
+
+def adders_required_parallel(n: int) -> int:
+    """Adder count of the recurrent architecture: N rows × (N−1) adders."""
+    return n * (n - 1)
+
+
+def adders_required_serial(n: int) -> int:
+    """Adder count of the hybrid architecture: one accumulator per row."""
+    return n
+
+
+def serialization_factor(n: int, overhead_clocks: int = 2) -> int:
+    """Fast-clock cycles needed per slow-clock phase update (paper §3).
+
+    The fast clock must run at least N times the phase-update clock (one
+    coupling value per fast edge) plus a small control overhead (reset and
+    result-hold registration).
+    """
+    return n + overhead_clocks

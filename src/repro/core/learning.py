@@ -1,0 +1,98 @@
+"""Learning rules for associative-memory ONNs.
+
+The paper trains pattern datasets with the Diederich–Opper I rule [12]
+(Diederich & Opper, PRL 1987): an iterative, perceptron-style local rule that
+repeats Hebbian increments on (pattern, neuron) pairs whose stability
+κ_i^μ = ξ_i^μ · (W ξ^μ)_i falls below a threshold, until every pattern is a
+sufficiently stable fixed point.  Also provided: the plain Hebbian rule (used
+as the DO-I starting point and as a baseline).
+
+Patterns ``xi``: (P, N) int8 in {−1,+1}.  Weights are float during training
+and quantized to the paper's 5-bit signed format afterwards
+(``quantization.quantize_weights``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def hebbian(xi: jax.Array, self_coupling: bool = True) -> jax.Array:
+    """W = (1/N) Σ_μ ξ^μ ξ^μᵀ  (optionally zeroing the diagonal)."""
+    p, n = xi.shape
+    w = jnp.einsum("pi,pj->ij", xi.astype(jnp.float32), xi.astype(jnp.float32)) / n
+    if not self_coupling:
+        w = w * (1.0 - jnp.eye(n, dtype=w.dtype))
+    return w
+
+
+class DOResult(NamedTuple):
+    weights: jax.Array  # (N, N) float32
+    sweeps: jax.Array  # int32: sweeps executed
+    converged: jax.Array  # bool: all stabilities ≥ threshold
+
+
+def diederich_opper_i(
+    xi: jax.Array,
+    threshold: float = 1.0,
+    lr: float | None = None,
+    max_sweeps: int = 500,
+    self_coupling: bool = True,
+    init_hebbian: bool = True,
+) -> DOResult:
+    """Diederich–Opper I: ΔW_i: = (lr) ξ_i^μ ξ^μ while κ_i^μ < threshold.
+
+    One *sweep* visits every pattern sequentially (the original prescription;
+    sequential visits make the convergence proof apply) and updates every
+    unstable row of W for that pattern.  ``lr`` defaults to 1/N.
+    Converges for P ≲ 2N random patterns; the paper's datasets (≤5 patterns)
+    converge in a handful of sweeps.
+    """
+    xi = xi.astype(jnp.float32)
+    p, n = xi.shape
+    step = (1.0 / n) if lr is None else lr
+    w0 = hebbian(xi) if init_hebbian else jnp.zeros((n, n), jnp.float32)
+    if not self_coupling:
+        w0 = w0 * (1.0 - jnp.eye(n))
+    diag_mask = jnp.ones((n, n), jnp.float32)
+    if not self_coupling:
+        diag_mask = diag_mask - jnp.eye(n)
+
+    def pattern_update(w, pat):
+        # κ_i = ξ_i (W ξ)_i ; unstable rows get the Hebbian increment.
+        field = w @ pat
+        kappa = pat * field
+        unstable = (kappa < threshold).astype(jnp.float32)  # (N,)
+        dw = step * jnp.outer(unstable * pat, pat) * diag_mask
+        return w + dw, jnp.sum(unstable)
+
+    def sweep(carry, _):
+        w, n_unstable_prev, sweeps_done, converged = carry
+        w2, n_unstable = jax.lax.scan(pattern_update, w, xi)
+        total_unstable = jnp.sum(n_unstable)
+        newly_converged = total_unstable == 0
+        # Freeze once converged (scan runs to fixed length).
+        w_out = jnp.where(converged, w, w2)
+        sweeps_done = jnp.where(converged, sweeps_done, sweeps_done + 1)
+        return (w_out, total_unstable, sweeps_done, converged | newly_converged), None
+
+    init = (w0, jnp.float32(jnp.inf), jnp.int32(0), jnp.bool_(False))
+    (w, _, sweeps, converged), _ = jax.lax.scan(sweep, init, None, length=max_sweeps)
+    return DOResult(weights=w, sweeps=sweeps, converged=converged)
+
+
+def stability_margins(w: jax.Array, xi: jax.Array) -> jax.Array:
+    """κ^μ_i = ξ_i^μ (W ξ^μ)_i for every pattern/neuron: (P, N)."""
+    fields = jnp.einsum("ij,pj->pi", w.astype(jnp.float32), xi.astype(jnp.float32))
+    return xi.astype(jnp.float32) * fields
+
+
+def patterns_are_fixed_points(w_int8: jax.Array, xi: jax.Array) -> jax.Array:
+    """True iff every pattern is a strict fixed point of the sign dynamics."""
+    fields = jnp.einsum(
+        "ij,pj->pi", w_int8.astype(jnp.int32), xi.astype(jnp.int32)
+    )
+    return jnp.all(xi.astype(jnp.int32) * fields > 0)

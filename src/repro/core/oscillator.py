@@ -1,0 +1,135 @@
+"""Phase-controlled digital oscillator semantics (paper §2.3, Fig. 3).
+
+The paper's oscillator is a circular shift register with ``2**n_phase_bits``
+positions, the first half initialized to 1 and the second half to 0, with a
+multiplexer tap selecting the phase-shifted output.  Advancing the register by
+one clock is bit-exact to incrementing a modular phase counter, and tapping
+register ``k`` is bit-exact to reading the amplitude at phase ``theta + k``.
+We therefore model each oscillator as a ``uint8`` phase counter; the explicit
+shift-register model is kept here (``ShiftRegisterOscillator``) purely as the
+oracle for the equivalence tests.
+
+Conventions
+-----------
+* ``theta`` ∈ [0, 2**p): phase counter, *rotating frame* (relative to the
+  global reference oscillator of the FPGA design).  The free-running advance
+  common to all oscillators cancels in this frame.
+* amplitude ``a = 1`` iff ``theta`` is in the first half-period (high half of
+  the square wave), else ``0``.
+* spin ``sigma = +1`` iff ``a == 1`` else ``-1`` (Ising encoding; paper Fig 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_PHASE_BITS = 4
+
+
+def n_positions(phase_bits: int = DEFAULT_PHASE_BITS) -> int:
+    """Number of shift-register positions == phases per period (paper eq. 4)."""
+    return 1 << phase_bits
+
+
+def phase_step_degrees(phase_bits: int = DEFAULT_PHASE_BITS) -> float:
+    """Size of one phase step in degrees (paper eq. 5)."""
+    return 360.0 / n_positions(phase_bits)
+
+
+def oscillator_period(t_clock: float, phase_bits: int = DEFAULT_PHASE_BITS) -> float:
+    """Oscillator period in seconds for a given clock period (paper eq. 3)."""
+    return n_positions(phase_bits) * t_clock
+
+
+def amplitude(theta: jax.Array, phase_bits: int = DEFAULT_PHASE_BITS) -> jax.Array:
+    """Square-wave amplitude (1/0) for phase counter ``theta``."""
+    half = n_positions(phase_bits) // 2
+    return (theta.astype(jnp.int32) < half).astype(jnp.int8)
+
+
+def spin(theta: jax.Array, phase_bits: int = DEFAULT_PHASE_BITS) -> jax.Array:
+    """Ising spin (+1 / -1) for phase counter ``theta``."""
+    return (2 * amplitude(theta, phase_bits) - 1).astype(jnp.int8)
+
+
+def phase_of_spin(sigma: jax.Array, phase_bits: int = DEFAULT_PHASE_BITS) -> jax.Array:
+    """Map spins ±1 to the canonical phases 0 (in-phase) / half (anti-phase)."""
+    half = n_positions(phase_bits) // 2
+    return jnp.where(sigma > 0, 0, half).astype(jnp.uint8)
+
+
+def free_run(theta: jax.Array, clocks: int, phase_bits: int = DEFAULT_PHASE_BITS) -> jax.Array:
+    """Advance the phase counter ``clocks`` clock edges (lab frame)."""
+    mask = n_positions(phase_bits) - 1
+    return ((theta.astype(jnp.int32) + clocks) & mask).astype(jnp.uint8)
+
+
+def reference_signal(weighted_sum: jax.Array, current_amp: jax.Array) -> jax.Array:
+    """Per-oscillator reference level (paper §2.3).
+
+    Positive weighted sum → high (1); negative → low (0); exactly zero → the
+    oscillator's own current amplitude (no pull).
+    """
+    return jnp.where(
+        weighted_sum > 0,
+        jnp.int8(1),
+        jnp.where(weighted_sum < 0, jnp.int8(0), current_amp.astype(jnp.int8)),
+    )
+
+
+def phase_align(
+    theta: jax.Array,
+    weighted_sum: jax.Array,
+    phase_bits: int = DEFAULT_PHASE_BITS,
+) -> jax.Array:
+    """Snap the oscillator phase to the reference wave (paper §2.3).
+
+    The edge-detector + counter of the RTL measures the phase difference
+    between the reference signal and the oscillator output and *adds* it to
+    the oscillator phase, i.e. the oscillator is aligned with the reference:
+    in the rotating frame, phase 0 if the reference is high, phase ``half``
+    if the reference is low, unchanged if the weighted sum is exactly zero.
+    """
+    half = n_positions(phase_bits) // 2
+    target_high = jnp.uint8(0)
+    target_low = jnp.uint8(half)
+    return jnp.where(
+        weighted_sum > 0,
+        target_high,
+        jnp.where(weighted_sum < 0, target_low, theta),
+    ).astype(jnp.uint8)
+
+
+@dataclasses.dataclass
+class ShiftRegisterOscillator:
+    """Explicit circular-shift-register oscillator (paper Fig. 3 + Table 3).
+
+    Test oracle only — numpy, one oscillator, clock-by-clock.  The first half
+    of the registers holds 1s, the second half 0s; each clock shifts left
+    (register ``k`` receives the value of register ``k+1``, the last receives
+    the first); the output taps register ``tap``.
+    """
+
+    phase_bits: int = DEFAULT_PHASE_BITS
+    tap: int = 0
+
+    def __post_init__(self) -> None:
+        n = n_positions(self.phase_bits)
+        self.registers = np.array([1] * (n // 2) + [0] * (n // 2), dtype=np.int8)
+
+    def clock(self) -> None:
+        self.registers = np.roll(self.registers, -1)
+
+    def output(self) -> int:
+        return int(self.registers[self.tap])
+
+    def set_phase(self, theta: int) -> None:
+        """Load the register state corresponding to phase counter ``theta``."""
+        n = n_positions(self.phase_bits)
+        base = np.array([1] * (n // 2) + [0] * (n // 2), dtype=np.int8)
+        # Phase counter theta == register pattern advanced by theta clocks.
+        self.registers = np.roll(base, -int(theta) % n)

@@ -1,0 +1,6 @@
+from repro.data.patterns import (  # noqa: F401
+    DATASET_SHAPES,
+    corrupt,
+    corrupt_batch,
+    load_dataset,
+)

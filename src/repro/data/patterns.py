@@ -1,0 +1,94 @@
+"""Pattern datasets for the associative-memory benchmark (paper §4.3).
+
+Five datasets at pattern sizes 3×3, 5×4, 7×6, 10×10 and 22×22.  Each holds
+five letter patterns (the 3×3 set holds two), drawn as binary pixel rasters.
+Spins: +1 = black pixel, −1 = white.  Corruption flips an exact number of
+randomly chosen pixels (``round(fraction · n_pixels)``), matching the paper's
+"corrupting a 10×10 pattern by 10 % means flipping the color on 10 pixels".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# 5×7 dot-matrix font for the letters used by the letter datasets.
+_FONT_5x7 = {
+    "A": ["01110", "10001", "10001", "11111", "10001", "10001", "10001"],
+    "B": ["11110", "10001", "11110", "10001", "10001", "10001", "11110"],
+    "C": ["01111", "10000", "10000", "10000", "10000", "10000", "01111"],
+    "E": ["11111", "10000", "11110", "10000", "10000", "10000", "11111"],
+    "H": ["10001", "10001", "10001", "11111", "10001", "10001", "10001"],
+    "L": ["10000", "10000", "10000", "10000", "10000", "10000", "11111"],
+    "N": ["10001", "11001", "10101", "10011", "10001", "10001", "10001"],
+    "T": ["11111", "00100", "00100", "00100", "00100", "00100", "00100"],
+    "U": ["10001", "10001", "10001", "10001", "10001", "10001", "01110"],
+    "X": ["10001", "01010", "00100", "00100", "01010", "10001", "10001"],
+}
+
+# (rows, cols) per dataset and letters used; 3×3 has two patterns (paper §4.3).
+DATASET_SHAPES: Dict[str, Tuple[int, int]] = {
+    "3x3": (3, 3),
+    "5x4": (5, 4),
+    "7x6": (7, 6),
+    "10x10": (10, 10),
+    "22x22": (22, 22),
+}
+DATASET_LETTERS: Dict[str, List[str]] = {
+    "3x3": ["X", "T"],
+    "5x4": ["A", "E", "H", "L", "T"],
+    "7x6": ["A", "E", "H", "L", "T"],
+    "10x10": ["A", "E", "H", "L", "T"],
+    "22x22": ["A", "E", "H", "L", "T"],
+}
+
+
+def _render_letter(letter: str, rows: int, cols: int) -> np.ndarray:
+    """Nearest-neighbor resample the 5×7 glyph onto a rows×cols raster."""
+    glyph = np.array(
+        [[int(c) for c in line] for line in _FONT_5x7[letter]], dtype=np.int8
+    )  # (7, 5)
+    ri = np.clip((np.arange(rows) * 7) // rows, 0, 6)
+    ci = np.clip((np.arange(cols) * 5) // cols, 0, 4)
+    img = glyph[np.ix_(ri, ci)]
+    return (2 * img - 1).astype(np.int8)  # {0,1} → {−1,+1}
+
+
+def load_dataset(name: str) -> jax.Array:
+    """Return (P, N) int8 spin patterns for dataset ``name``."""
+    rows, cols = DATASET_SHAPES[name]
+    letters = DATASET_LETTERS[name]
+    pats = np.stack([_render_letter(c, rows, cols).reshape(-1) for c in letters])
+    # Degenerate tiny rasters can collide; nudge collisions apart deterministically.
+    for i in range(len(pats)):
+        for j in range(i):
+            if np.array_equal(pats[i], pats[j]) or np.array_equal(pats[i], -pats[j]):
+                pats[i][j % pats.shape[1]] *= -1
+    return jnp.asarray(pats, dtype=jnp.int8)
+
+
+def n_corrupt_pixels(n_pixels: int, fraction: float) -> int:
+    """Exact pixel count flipped at a corruption level (paper convention)."""
+    return int(round(n_pixels * fraction))
+
+
+def corrupt(
+    pattern: jax.Array, key: jax.Array, fraction: float
+) -> jax.Array:
+    """Flip ``round(fraction·N)`` randomly chosen pixels of one pattern."""
+    n = pattern.shape[-1]
+    k = n_corrupt_pixels(n, fraction)
+    idx = jax.random.choice(key, n, shape=(k,), replace=False)
+    flip = jnp.ones((n,), jnp.int8).at[idx].set(-1)
+    return (pattern * flip).astype(jnp.int8)
+
+
+def corrupt_batch(
+    pattern: jax.Array, key: jax.Array, fraction: float, trials: int
+) -> jax.Array:
+    """(trials, N) independently corrupted copies of one pattern."""
+    keys = jax.random.split(key, trials)
+    return jax.vmap(lambda k: corrupt(pattern, k, fraction))(keys)

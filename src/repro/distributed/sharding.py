@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules and activation sharding constraints.
+
+Rule tables map logical axis names → mesh axis (or tuple of mesh axes, or
+None for replication).  Models annotate activations with
+``shard(x, "batch", "seq", "embed")``; inside an active rule context over a
+mesh this becomes ``with_sharding_constraint``, otherwise it is the identity
+(so the same model code runs on 1 CPU device in the smoke tests and on the
+512-chip dry-run mesh unchanged).
+
+Default placement (the paper-faithful baseline for §Perf):
+  * batch        → all data-parallel axes ("pod", "data")
+  * embed (fsdp) → "data"      — ZeRO-style weight sharding within a pod
+  * heads/mlp/vocab/experts → "model"  — tensor parallelism
+  * kv sequence (decode caches) → "data" for batch=1 long-context cells
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import logical_to_pspec
+
+_state = threading.local()
+
+
+def single_pod_rules() -> Dict[str, Any]:
+    return {
+        "batch": "data",
+        "embed": "data",  # FSDP / ZeRO-3 over the data axis
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_embed": "data",  # FSDP over expert d-dims (see moe_specs)
+        "expert_mlp": None,
+        "kv_seq": None,
+        "seq_act": None,  # sequence-parallel attention (override → "model")
+        "state": None,
+        "qk_dim": None,
+        "head_dim": None,
+        "vision": None,
+    }
+
+
+def multi_pod_rules() -> Dict[str, Any]:
+    r = single_pod_rules()
+    r["batch"] = ("pod", "data")  # DP across pods; FSDP stays intra-pod
+    return r
+
+
+def long_context_rules(multi_pod: bool = False) -> Dict[str, Any]:
+    """batch=1 decode: shard the KV/scan sequence dim instead of batch."""
+    r = multi_pod_rules() if multi_pod else single_pod_rules()
+    r["batch"] = None
+    r["kv_seq"] = ("pod", "data") if multi_pod else "data"
+    return r
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Dict[str, Any]], mesh: Optional[Mesh] = None):
+    """Activate a rule table (and optionally a mesh) for model tracing."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (rules, mesh)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op outside rules)."""
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[0] is None:
+        return x
+    rules, mesh = ctx
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        spec = logical_to_pspec(tuple(axes), rules, tuple(x.shape), sizes)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    spec = logical_to_pspec(tuple(axes), rules)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def data_spec(rules: Dict[str, Any], *axes: Optional[str]) -> P:
+    """PartitionSpec for model inputs (tokens, frames, caches)."""
+    return logical_to_pspec(tuple(axes), rules)

@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the paper's compute hot-spot: the coupling-element
+# weighted sum (recurrent: one big parallel contraction; hybrid: serialized
+# block streaming).  ops.py holds the jit'd wrappers, ref.py the jnp oracles.
+from repro.kernels.ops import coupling_sum, onn_step, quantized_matvec  # noqa: F401

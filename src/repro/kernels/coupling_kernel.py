@@ -1,0 +1,214 @@
+"""Pallas TPU kernels for the ONN coupling computation.
+
+The paper's hybrid architecture streams each oscillator's weight row from
+addressable memory through a single MAC on a fast clock.  The TPU-native
+version of that insight: stream quantized weight *blocks* HBM→VMEM and
+accumulate partial sums on-chip, with the MXU playing the role of the DSP
+MAC array.  The serial counter of the FPGA design becomes the innermost grid
+dimension; the BRAM row becomes a VMEM tile; the slow/fast clock-domain pair
+becomes the (outer grid step, inner contraction step) pair.
+
+Kernels
+-------
+* ``coupling_sum``:   S[b,i]  = Σ_j W[i,j] σ[b,j]           (int8 → int32)
+* ``onn_step_fused``: σ'[b,i] = sign-align(S[b,i] + h[i])    (fused epilogue)
+* ``quantized_matvec``: y = (W_q · scale) @ x                 (int8 × f32 GEMV)
+
+All are validated against ``ref.py`` in interpret mode (this container is
+CPU-only); block shapes are hardware-aligned for the 128×128 MXU and the
+(32, 128) int8 VMEM tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Hardware-aligned defaults (tunable per §Perf): MXU lane = 128;
+# int8 sublane = 32.  Working set per step for the fused kernel:
+#   σ tile (bb×bk) + W tile (bi×bk) + acc (bb×bi ×4B)  ≤ VMEM (~16 MiB/core).
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_I = 128
+DEFAULT_BLOCK_K = 128
+
+
+def vmem_bytes(bb: int, bi: int, bk: int, fused: bool = True) -> int:
+    """VMEM working-set estimate for one grid step (for block-size tuning)."""
+    sig = bb * bk  # int8
+    w = bi * bk  # int8
+    acc = bb * bi * 4  # int32 accumulator
+    sig_self = bb * bi if fused else 0  # tie-keeping σ view
+    out = bb * bi * (1 if fused else 4)
+    return sig + w + acc + sig_self + out
+
+
+# ---------------------------------------------------------------------------
+# coupling_sum: S = σ @ Wᵀ, int32 accumulation in the output block.
+# ---------------------------------------------------------------------------
+
+
+def _coupling_sum_kernel(sigma_ref, w_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # (bb, bk) · (bi, bk)ᵀ → (bb, bi), exact int32 accumulation (MXU int8 path).
+    partial = jax.lax.dot_general(
+        sigma_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    out_ref[...] += partial
+
+
+def coupling_sum_pallas(
+    sigma: jax.Array,
+    w: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """S[b,i] = Σ_j W[i,j] σ[b,j].  Shapes must be pre-padded to block multiples."""
+    b, n = sigma.shape
+    ni, nk = w.shape
+    assert n == nk and b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0
+    grid = (ni // block_i, b // block_b, nk // block_k)
+    return pl.pallas_call(
+        _coupling_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, bb, k: (bb, k)),
+            pl.BlockSpec((block_i, block_k), lambda i, bb, k: (i, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ni), jnp.int32),
+        interpret=interpret,
+    )(sigma, w)
+
+
+# ---------------------------------------------------------------------------
+# onn_step_fused: accumulate in VMEM scratch, epilogue applies the phase-
+# alignment sign rule (paper §2.3) — the reference-signal generation fused
+# into the coupling computation.
+# ---------------------------------------------------------------------------
+
+
+def _onn_step_kernel(sigma_ref, w_ref, bias_ref, sigma_self_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        sigma_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        s = acc_ref[...] + bias_ref[...].astype(jnp.int32)  # (bb, bi)
+        keep = sigma_self_ref[...].astype(jnp.int32)
+        out_ref[...] = jnp.where(s > 0, 1, jnp.where(s < 0, -1, keep)).astype(jnp.int8)
+
+
+def onn_step_pallas(
+    sigma: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused σ' = sign-align(W σ + h); ties keep the current spin."""
+    b, n = sigma.shape
+    ni, nk = w.shape
+    assert n == nk and b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0
+    grid = (ni // block_i, b // block_b, nk // block_k)
+    bias2d = bias.reshape(1, -1)
+    return pl.pallas_call(
+        _onn_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, bb, k: (bb, k)),
+            pl.BlockSpec((block_i, block_k), lambda i, bb, k: (i, k)),
+            pl.BlockSpec((1, block_i), lambda i, bb, k: (0, i)),
+            pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ni), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((block_b, block_i), jnp.int32)],
+        interpret=interpret,
+    )(sigma, w, bias2d, sigma)
+
+
+# ---------------------------------------------------------------------------
+# quantized_matvec: the transferable version of the hybrid insight — a
+# weight-streaming int8 GEMV with on-chip f32 accumulation and a per-row
+# dequantization epilogue (memory-bound decode shapes).
+# ---------------------------------------------------------------------------
+
+
+def _quantized_matvec_kernel(x_ref, w_ref, scale_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out_ref[...] = acc_ref[...] * scale_ref[...]
+
+
+def quantized_matvec_pallas(
+    x: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    *,
+    block_b: int = 8,
+    block_m: int = DEFAULT_BLOCK_I,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[b,m] = Σ_k x[b,k] W_q[m,k] · scale[m]  (f32 out)."""
+    b, kdim = x.shape
+    m, kw = w_q.shape
+    assert kdim == kw and b % block_b == 0 and m % block_m == 0 and kdim % block_k == 0
+    grid = (m // block_m, b // block_b, kdim // block_k)
+    scale2d = scale.reshape(1, -1)
+    return pl.pallas_call(
+        _quantized_matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, bb, k: (bb, k)),
+            pl.BlockSpec((block_m, block_k), lambda i, bb, k: (i, k)),
+            pl.BlockSpec((1, block_m), lambda i, bb, k: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_m), lambda i, bb, k: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_m), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, scale2d)

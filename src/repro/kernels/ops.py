@@ -1,0 +1,132 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to hardware-aligned block multiples, batch reshaping, backend
+selection (interpret mode on CPU — this container — and compiled mode on
+TPU), and a pure-jnp fallback (``use_pallas=False``) used by the large CPU
+benchmark sweeps where interpret-mode execution would dominate runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import coupling_kernel as _k
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _pick_block(size: int, preferred: int, minimum: int = 8) -> int:
+    """Largest power-of-two block ≤ preferred that keeps padding small."""
+    b = preferred
+    while b > minimum and b > size:
+        b //= 2
+    return max(b, minimum)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
+def coupling_sum(
+    w: jax.Array,
+    sigma: jax.Array,
+    *,
+    use_pallas: bool = True,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    block_i: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """S = W σ for spins σ of shape (N,) or (..., N); returns int32."""
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    n = w.shape[0]
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    if not use_pallas:
+        out = _ref.coupling_sum_ref(w, sig2d)
+    else:
+        bb = _pick_block(sig2d.shape[0], block_b)
+        bi = _pick_block(n, block_i)
+        bk = _pick_block(n, block_k)
+        sig_p = _pad_to(_pad_to(sig2d, 0, bb), 1, bk)
+        w_p = _pad_to(_pad_to(w.astype(jnp.int8), 0, bi), 1, bk)
+        out = _k.coupling_sum_pallas(
+            sig_p, w_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
+        )[: sig2d.shape[0], :n]
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
+def onn_step(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    use_pallas: bool = True,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    block_i: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Fused ONN phase-update step: σ' = sign-align(W σ + h)."""
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    n = w.shape[0]
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    h = jnp.zeros((n,), jnp.int32) if bias is None else bias.astype(jnp.int32)
+    if not use_pallas:
+        out = _ref.onn_step_ref(w, sig2d, h)
+    else:
+        bb = _pick_block(sig2d.shape[0], block_b)
+        bi = _pick_block(n, block_i)
+        bk = _pick_block(n, block_k)
+        sig_p = _pad_to(_pad_to(sig2d, 0, bb), 1, bk)
+        w_p = _pad_to(_pad_to(w.astype(jnp.int8), 0, bi), 1, bk)
+        h_p = _pad_to(h, 0, bi)
+        out = _k.onn_step_pallas(
+            sig_p, w_p, h_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
+        )[: sig2d.shape[0], :n]
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
+def quantized_matvec(
+    w_q: jax.Array,
+    scale: jax.Array,
+    x: jax.Array,
+    *,
+    use_pallas: bool = True,
+    block_b: int = 8,
+    block_m: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = 512,
+) -> jax.Array:
+    """y = (W_q · scale) @ x with per-row scale; x: (..., K) f32."""
+    squeeze = x.ndim == 1
+    batch_shape = x.shape[:-1]
+    m, kdim = w_q.shape
+    x2d = x.reshape(-1, kdim).astype(jnp.float32)
+    scale_full = jnp.broadcast_to(scale, (m,)).astype(jnp.float32)
+    if not use_pallas:
+        out = _ref.quantized_matvec_ref(w_q, scale_full, x2d)
+    else:
+        bb = _pick_block(x2d.shape[0], block_b)
+        bm = _pick_block(m, block_m)
+        bk = _pick_block(kdim, block_k, minimum=128)
+        x_p = _pad_to(_pad_to(x2d, 0, bb), 1, bk)
+        w_p = _pad_to(_pad_to(w_q.astype(jnp.int8), 0, bm), 1, bk)
+        s_p = _pad_to(scale_full, 0, bm)
+        out = _k.quantized_matvec_pallas(
+            x_p, w_p, s_p, block_b=bb, block_m=bm, block_k=bk, interpret=_interpret()
+        )[: x2d.shape[0], :m]
+    return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)

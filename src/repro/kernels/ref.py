@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference semantics here; the kernel
+tests sweep shapes/dtypes and assert allclose (exact for the integer paths)
+against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coupling_sum_ref(w: jax.Array, sigma: jax.Array) -> jax.Array:
+    """S = σ Wᵀ: (B, N) int8 spins × (N, N) int8 weights → (B, N) int32."""
+    return jnp.einsum(
+        "ij,bj->bi",
+        w.astype(jnp.int32),
+        sigma.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def onn_step_ref(w: jax.Array, sigma: jax.Array, bias: jax.Array | None = None) -> jax.Array:
+    """Fused coupling sum + sign alignment: σ' = sign(S), ties keep σ."""
+    s = coupling_sum_ref(w, sigma)
+    if bias is not None:
+        s = s + bias.astype(jnp.int32)[None, :]
+    return jnp.where(s > 0, 1, jnp.where(s < 0, -1, sigma.astype(jnp.int32))).astype(
+        jnp.int8
+    )
+
+
+def quantized_matvec_ref(w_q: jax.Array, scale: jax.Array, x: jax.Array) -> jax.Array:
+    """General quantized GEMV: y = (w_q · scale) @ x in f32.
+
+    ``w_q``: (M, K) int8; ``scale``: per-row (M,) or scalar f32; ``x``: (B, K) f32.
+    """
+    acc = jnp.einsum(
+        "mk,bk->bm", w_q.astype(jnp.float32), x.astype(jnp.float32)
+    )
+    return acc * jnp.broadcast_to(scale, acc.shape[-1:])

@@ -1,0 +1,186 @@
+"""HLO-text analysis: collective traffic + roofline terms from a dry run.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed but NOT collective
+traffic; we parse the post-SPMD compiled HLO text and sum the bytes every
+collective moves, using ring-algorithm models per op:
+
+  all-gather          (S−1)/S · result_bytes
+  reduce-scatter      (S−1)   · result_bytes        (input = S · result)
+  all-reduce          2·(S−1)/S · result_bytes      (ring RS + AG)
+  all-to-all          (S−1)/S · result_bytes
+  collective-permute  result_bytes
+
+where S is the replica-group size parsed from ``replica_groups``.  These are
+*per-participating-device* bytes on the wire, which is what the ICI roofline
+term wants.
+
+Roofline constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (values given in the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-reduce.1 = f32[16,128]{1,0} all-reduce(
+#       %ag = (bf16[4,8]{1,0}, bf16[2]{0}) all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dtype>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^a-z]*?\}\}|\[[0-9,]+\]<=\[[0-9,]+\])")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype = m.group("dtype")
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    # iota form: [G,S]<=[N] (possibly more dims; group size = product/num_groups)
+    dims_part = g[1 : g.index("]")]
+    dims = [int(x) for x in dims_part.split(",")]
+    total_part = g[g.rindex("[") + 1 : -1]
+    total = 1
+    for x in total_part.split(","):
+        total *= int(x)
+    n_groups = dims[0]
+    return max(total // max(n_groups, 1), 1)
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda s: (s - 1) / s,
+    "reduce-scatter": lambda s: float(s - 1),
+    "all-reduce": lambda s: 2 * (s - 1) / s,
+    "all-to-all": lambda s: (s - 1) / s,
+    "collective-permute": lambda s: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes: Dict[str, float]  # wire bytes per participating device
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    byts: Dict[str, float] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        # async pairs: count -start, skip -done (same op twice otherwise)
+        if f"{m.group('op')}-done(" in line:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("type"))
+        s = _group_size(line, n_devices)
+        if s <= 1:
+            continue
+        wire = _WIRE_FACTOR[op](s) * size
+        counts[op] = counts.get(op, 0) + 1
+        byts[op] = byts.get(op, 0.0) + wire
+    return CollectiveStats(counts=counts, bytes=byts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled cell (seconds, per device)."""
+
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "n_devices": self.n_devices,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def model_flops(kind: str, n_params: int, tokens: int, n_active: Optional[int] = None) -> float:
+    """Reference useful FLOPs: 6·N·D train, 2·N·D forward-only (per step)."""
+    n = n_active if n_active is not None else n_params
+    factor = 6.0 if kind == "train" else 2.0
+    return factor * n * tokens

@@ -1,0 +1,240 @@
+"""Whisper-style encoder–decoder backbone (whisper-large-v3 layout).
+
+Per the assignment the modality frontend is a STUB: ``input_specs()`` supplies
+precomputed frame embeddings ``(B, T_enc, d_model)`` (the output the two conv
+layers would produce), so no conv tower is built.  The backbone is faithful:
+pre-LayerNorm blocks with biased attention projections and GELU MLPs, causal
+decoder self-attention plus cross-attention over the encoder memory, tied
+input/output embeddings.
+
+Deviation (recorded in DESIGN.md): both stacks use *sinusoidal* positions
+(real Whisper: sinusoidal encoder, learned decoder).  A learned table would
+pin the parameter shapes to one sequence length; sinusoids keep one parameter
+tree valid across all four assigned shape cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.transformer import _stack
+
+
+def sinusoid(seq_len: int, d: int, offset: jax.Array | int = 0) -> jax.Array:
+    """Standard transformer sinusoidal position encoding (S, d) f32."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + jnp.asarray(offset, jnp.float32)
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _ln_specs(d: int) -> Dict[str, ParamSpec]:
+    return {
+        "w": ParamSpec((d,), ("embed",), init="ones"),
+        "b": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def enc_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": _ln_specs(cfg.d_model),
+        "attn": L.attention_specs(cfg),
+        "ln2": _ln_specs(cfg.d_model),
+        "mlp": L.gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def dec_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    # Cross-attention is bias-free (L.cross_attention does not consume biases).
+    no_bias_cfg = dataclasses.replace(cfg, qkv_bias=False)
+    return {
+        "ln1": _ln_specs(cfg.d_model),
+        "self_attn": L.attention_specs(cfg),
+        "ln_x": _ln_specs(cfg.d_model),
+        "cross_attn": L.attention_specs(no_bias_cfg),
+        "ln2": _ln_specs(cfg.d_model),
+        "mlp": L.gelu_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def build_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "enc_blocks": _stack(enc_block_specs(cfg), cfg.n_encoder_layers),
+        "enc_norm": _ln_specs(d),
+        "dec_blocks": _stack(dec_block_specs(cfg), cfg.n_layers),
+        "dec_norm": _ln_specs(d),
+        # lm head tied to embed (Whisper convention).
+    }
+
+
+def _ln(x, p, eps=1e-5):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, T_enc, D) stub frame embeddings → encoder memory."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.dtype) + sinusoid(s, d).astype(cfg.dtype)[None]
+    x = shard(x, "batch", None, None)
+
+    def body(xc, lp):
+        h = _ln(xc, lp["ln1"])
+        xc = xc + L.self_attention(lp["attn"], h, cfg, None, causal=False, rope=False)
+        h = _ln(xc, lp["ln2"])
+        xc = xc + L.gelu_mlp(lp["mlp"], h)
+        return shard(xc, "batch", None, None), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=not cfg.scan_layers)
+    return _ln(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Decoder (full-sequence: training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def decode_sequence(
+    params,
+    memory: jax.Array,  # (B, T_enc, D) encoder output
+    tokens: jax.Array,  # (B, T_dec) int32
+    cfg: ModelConfig,
+    collect_kv: bool = False,
+):
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed"].astype(cfg.dtype)[tokens] + sinusoid(s, d).astype(cfg.dtype)[None]
+    x = shard(x, "batch", None, None)
+
+    def body(xc, lp):
+        out = None
+        h = _ln(xc, lp["ln1"])
+        if collect_kv:
+            _, k, v = L.project_qkv(lp["self_attn"], h, cfg, None, rope=False)
+            xk = jnp.einsum("bnd,dhk->bnhk", memory, lp["cross_attn"]["wk"])
+            xv = jnp.einsum("bnd,dhk->bnhk", memory, lp["cross_attn"]["wv"])
+            out = (k, v, xk, xv)
+        xc = xc + L.self_attention(lp["self_attn"], h, cfg, None, causal=True, rope=False)
+        h = _ln(xc, lp["ln_x"])
+        xc = xc + L.cross_attention(lp["cross_attn"], h, memory, cfg)
+        h = _ln(xc, lp["ln2"])
+        xc = xc + L.gelu_mlp(lp["mlp"], h)
+        return shard(xc, "batch", None, None), out
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, kv = jax.lax.scan(body, x, params["dec_blocks"], unroll=not cfg.scan_layers)
+    x = _ln(x, params["dec_norm"])
+    return x, kv
+
+
+def lm_logits(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
+    logits = shard(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+
+def init_cache_specs(
+    cfg: ModelConfig, batch: int, seq_len: int, enc_len: int
+) -> Dict[str, Any]:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    lyr = cfg.n_layers
+    return {
+        "k": ParamSpec(
+            (lyr, batch, seq_len, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "v": ParamSpec(
+            (lyr, batch, seq_len, kv, hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "cross_k": ParamSpec(
+            (lyr, batch, enc_len, kv, hd),
+            ("layers", "batch", None, "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "cross_v": ParamSpec(
+            (lyr, batch, enc_len, kv, hd),
+            ("layers", "batch", None, "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+    }
+
+
+def decode_step(
+    params,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1)
+    index: jax.Array,  # scalar
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    d = cfg.d_model
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = x + sinusoid(1, d, offset=index).astype(cfg.dtype)[None]
+    x = shard(x, "batch", None, None)
+
+    def body(x_step, inp):
+        lp, ck, cv, xk, xv = inp
+        h = _ln(x_step, lp["ln1"])
+        y, nk, nv = L.decode_attention(lp["self_attn"], h, ck, cv, index, cfg, rope=False)
+        x_step = x_step + y
+        h = _ln(x_step, lp["ln_x"])
+        x_step = x_step + L.cross_attention_cached(lp["cross_attn"], h, xk, xv, cfg)
+        h = _ln(x_step, lp["ln2"])
+        x_step = x_step + L.gelu_mlp(lp["mlp"], h)
+        return x_step, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        unroll=not cfg.scan_layers,
+    )
+    x = _ln(x, params["dec_norm"])
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, dict(cache, k=nk, v=nv)
+
+
+def prefill(
+    params,
+    frames: jax.Array,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Encode audio + run the decoder prompt; emit logits and all caches."""
+    memory = encode(params, frames, cfg)
+    x, kv = decode_sequence(params, memory, tokens, cfg, collect_kv=True)
+    k, v, xk, xv = kv
+    logits = lm_logits(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, {"k": k, "v": v, "cross_k": xk, "cross_v": xv}

@@ -1,0 +1,353 @@
+"""Hybrid/SSM LM assemblies: zamba2 (Mamba2 + shared attention) and xLSTM.
+
+zamba2-2.7b: 54 Mamba2 layers; ONE shared transformer block (attention +
+SwiGLU MLP, weights shared) is invoked after every ``shared_attn_every``
+Mamba layers, each invocation with its own (unshared) input RMSNorm — the
+simplified Zamba2 scheme recorded in DESIGN.md.  The scan is over groups of
+(``shared_attn_every`` Mamba layers, 1 shared-block invocation).
+
+xlstm-1.3b: 48 blocks in groups of (``slstm_every``−1 mLSTM, 1 sLSTM).
+
+Both are O(1)-state decoders, which is why these two archs run the
+``long_500k`` cell: nothing scales with context except zamba2's shared-block
+KV cache (sharded over the data axis at batch=1 via the ``kv_seq`` rule).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.transformer import _stack, lm_head
+
+
+# ---------------------------------------------------------------------------
+# zamba2
+# ---------------------------------------------------------------------------
+
+
+def _zamba_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def zamba_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    g = _zamba_groups(cfg)
+    mamba_block = {
+        "ln": ParamSpec((d,), ("embed",), init="ones"),
+        "mamba": S.mamba_specs(cfg),
+    }
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "blocks": _stack(_stack(mamba_block, cfg.shared_attn_every, "stack"), g),
+        # Shared transformer block: ONE copy of the weights...
+        "shared": {
+            "attn": L.attention_specs(cfg),
+            "mlp": L.swiglu_specs(d, cfg.d_ff),
+        },
+        # ...but a per-invocation input norm (g copies).
+        "shared_ln1": ParamSpec((g, d), ("layers", "embed"), init="ones"),
+        "shared_ln2": ParamSpec((g, d), ("layers", "embed"), init="ones"),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def zamba_forward_hidden(
+    params, tokens: jax.Array, cfg: ModelConfig, collect_cache: bool = False
+):
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    shared = params["shared"]
+
+    def group_body(xc, gp):
+        def inner(c, lp):
+            h = L.rms_norm(c, lp["ln"], cfg.norm_eps)
+            if collect_cache:
+                y, mcache = S.mamba_forward(lp["mamba"], h, cfg, return_cache=True)
+            else:
+                y, mcache = S.mamba_forward(lp["mamba"], h, cfg), None
+            return c + y, mcache
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        xc, mcaches = jax.lax.scan(
+            inner, xc, gp["mamba_blocks"], unroll=not cfg.scan_layers
+        )
+        # Shared attention block, per-invocation norms.
+        h = L.rms_norm(xc, gp["ln1"], cfg.norm_eps)
+        kv = None
+        if collect_cache:
+            _, k, v = L.project_qkv(shared["attn"], h, cfg, positions)
+            kv = (k, v)
+        xc = xc + L.self_attention(shared["attn"], h, cfg, positions)
+        h = L.rms_norm(xc, gp["ln2"], cfg.norm_eps)
+        xc = xc + L.swiglu(shared["mlp"], h)
+        return shard(xc, "batch", None, None), (mcaches, kv)
+
+    xs = {
+        "mamba_blocks": params["blocks"],
+        "ln1": params["shared_ln1"],
+        "ln2": params["shared_ln2"],
+    }
+    x, caches = jax.lax.scan(group_body, x, xs, unroll=not cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def zamba_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    g = _zamba_groups(cfg)
+    e = cfg.shared_attn_every
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": ParamSpec(
+            (g, e, batch, cfg.ssm_conv - 1, di + 2 * n),
+            ("layers", "stack", "batch", None, "mlp"),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "state": ParamSpec(
+            (g, e, batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+            ("layers", "stack", "batch", "heads", None, None),
+            dtype=jnp.float32,
+            init="zeros",
+        ),
+        "k": ParamSpec(
+            (g, batch, seq_len, cfg.n_kv_heads, cfg.hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "v": ParamSpec(
+            (g, batch, seq_len, cfg.n_kv_heads, cfg.hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+    }
+
+
+def zamba_decode_step(
+    params, cache: Dict[str, jax.Array], token: jax.Array, index: jax.Array, cfg: ModelConfig
+):
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = shard(x, "batch", None, None)
+    shared = params["shared"]
+
+    def group_body(x_step, gp):
+        def inner(c, inp):
+            lp, conv, state = inp
+            h = L.rms_norm(c, lp["ln"], cfg.norm_eps)
+            y, mc = S.mamba_decode_step(lp["mamba"], h, S.MambaCache(conv, state), cfg)
+            return c + y, (mc.conv, mc.state)
+
+        x_step, (nconv, nstate) = jax.lax.scan(
+            inner, x_step, (gp["mamba_blocks"], gp["conv"], gp["state"]),
+            unroll=not cfg.scan_layers,
+        )
+        h = L.rms_norm(x_step, gp["ln1"], cfg.norm_eps)
+        y, nk, nv = L.decode_attention(shared["attn"], h, gp["k"], gp["v"], index, cfg)
+        x_step = x_step + y
+        h = L.rms_norm(x_step, gp["ln2"], cfg.norm_eps)
+        x_step = x_step + L.swiglu(shared["mlp"], h)
+        return x_step, (nconv, nstate, nk, nv)
+
+    xs = {
+        "mamba_blocks": params["blocks"],
+        "ln1": params["shared_ln1"],
+        "ln2": params["shared_ln2"],
+        "conv": cache["conv"].astype(cfg.dtype),
+        "state": cache["state"],
+        "k": cache["k"],
+        "v": cache["v"],
+    }
+    x, (nconv, nstate, nk, nv) = jax.lax.scan(
+        group_body, x, xs, unroll=not cfg.scan_layers
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)[:, 0]
+    return logits, {"conv": nconv, "state": nstate, "k": nk, "v": nv}
+
+
+def zamba_prefill(params, tokens: jax.Array, cfg: ModelConfig):
+    x, (mcaches, kv) = zamba_forward_hidden(params, tokens, cfg, collect_cache=True)
+    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    k, v = kv
+    cache = {
+        "conv": mcaches.conv,  # (g, e, B, K-1, C)
+        "state": mcaches.state,
+        "k": k,
+        "v": v,
+    }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_groups(cfg: ModelConfig) -> Tuple[int, int]:
+    assert cfg.n_layers % cfg.slstm_every == 0
+    g = cfg.n_layers // cfg.slstm_every
+    return g, cfg.slstm_every - 1  # (groups, mLSTM per group)
+
+
+def xlstm_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    g, m = _xlstm_groups(cfg)
+    mblock = {"ln": ParamSpec((d,), ("embed",), init="ones"), "mlstm": X.mlstm_specs(cfg)}
+    sblock = {"ln": ParamSpec((d,), ("embed",), init="ones"), "slstm": X.slstm_specs(cfg)}
+    return {
+        "embed": ParamSpec((cfg.padded_vocab, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "mblocks": _stack(_stack(mblock, m, "stack"), g),
+        "sblocks": _stack(sblock, g),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "lm_head": ParamSpec((d, cfg.padded_vocab), ("embed", "vocab")),
+    }
+
+
+def xlstm_forward_hidden(
+    params, tokens: jax.Array, cfg: ModelConfig, collect_cache: bool = False
+):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard(x, "batch", None, None)
+
+    def group_body(xc, gp):
+        def inner(c, lp):
+            h = L.rms_norm(c, lp["ln"], cfg.norm_eps)
+            if collect_cache:
+                y, mc = X.mlstm_forward(lp["mlstm"], h, cfg, return_cache=True)
+            else:
+                y, mc = X.mlstm_forward(lp["mlstm"], h, cfg), None
+            return c + y, mc
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        xc, mcaches = jax.lax.scan(inner, xc, gp["m"], unroll=not cfg.scan_layers)
+        h = L.rms_norm(xc, gp["s"]["ln"], cfg.norm_eps)
+        scache = None
+        if collect_cache:
+            y, scache = X.slstm_forward(gp["s"]["slstm"], h, cfg, return_cache=True)
+        else:
+            y = X.slstm_forward(gp["s"]["slstm"], h, cfg)
+        xc = xc + y
+        return shard(xc, "batch", None, None), (mcaches, scache)
+
+    xs = {"m": params["mblocks"], "s": params["sblocks"]}
+    x, caches = jax.lax.scan(group_body, x, xs, unroll=not cfg.scan_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def xlstm_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    del seq_len  # state is O(1) in context — the xLSTM long-context advantage
+    g, m = _xlstm_groups(cfg)
+    h = cfg.n_heads
+    qk, vd = cfg.mlstm_qk_dim, cfg.d_inner // cfg.n_heads
+    hd = cfg.d_model // h
+    return {
+        "m_conv": ParamSpec(
+            (g, m, batch, cfg.ssm_conv - 1, cfg.d_inner),
+            ("layers", "stack", "batch", None, "mlp"),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "m_state": ParamSpec(
+            (g, m, batch, h, qk, vd + 1),
+            ("layers", "stack", "batch", "heads", None, None),
+            dtype=jnp.float32,
+            init="zeros",
+        ),
+        "s_conv": ParamSpec(
+            (g, batch, cfg.ssm_conv - 1, cfg.d_model),
+            ("layers", "batch", None, "embed"),
+            dtype=cfg.dtype,
+            init="zeros",
+        ),
+        "s_c": ParamSpec(
+            (g, batch, h, hd), ("layers", "batch", "heads", None), dtype=jnp.float32, init="zeros"
+        ),
+        "s_n": ParamSpec(
+            (g, batch, h, hd), ("layers", "batch", "heads", None), dtype=jnp.float32, init="ones"
+        ),
+        "s_h": ParamSpec(
+            (g, batch, h, hd), ("layers", "batch", "heads", None), dtype=jnp.float32, init="zeros"
+        ),
+    }
+
+
+def xlstm_decode_step(
+    params, cache: Dict[str, jax.Array], token: jax.Array, index: jax.Array, cfg: ModelConfig
+):
+    del index  # recurrent decode has no positional index
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = shard(x, "batch", None, None)
+
+    def group_body(x_step, gp):
+        def inner(c, inp):
+            lp, conv, state = inp
+            h = L.rms_norm(c, lp["ln"], cfg.norm_eps)
+            y, mc = X.mlstm_decode_step(lp["mlstm"], h, X.MLSTMCache(conv, state), cfg)
+            return c + y, (mc.conv, mc.state)
+
+        x_step, (nconv, nstate) = jax.lax.scan(
+            inner, x_step, (gp["m"], gp["m_conv"], gp["m_state"]),
+            unroll=not cfg.scan_layers,
+        )
+        h = L.rms_norm(x_step, gp["s"]["ln"], cfg.norm_eps)
+        scache = (gp["s_conv"], X.SLSTMCache(c=gp["s_c"], n=gp["s_n"], h=gp["s_h"]))
+        y, (nsconv, nscell) = X.slstm_decode_step(gp["s"]["slstm"], h, scache, cfg)
+        x_step = x_step + y
+        return x_step, (nconv, nstate, nsconv, nscell)
+
+    xs = {
+        "m": params["mblocks"],
+        "s": params["sblocks"],
+        "m_conv": cache["m_conv"].astype(cfg.dtype),
+        "m_state": cache["m_state"],
+        "s_conv": cache["s_conv"].astype(cfg.dtype),
+        "s_c": cache["s_c"],
+        "s_n": cache["s_n"],
+        "s_h": cache["s_h"],
+    }
+    x, (nconv, nstate, nsconv, nscell) = jax.lax.scan(
+        group_body, x, xs, unroll=not cfg.scan_layers
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)[:, 0]
+    new_cache = {
+        "m_conv": nconv,
+        "m_state": nstate,
+        "s_conv": nsconv,
+        "s_c": nscell.c,
+        "s_n": nscell.n,
+        "s_h": nscell.h,
+    }
+    return logits, new_cache
+
+
+def xlstm_prefill(params, tokens: jax.Array, cfg: ModelConfig):
+    x, (mcaches, scaches) = xlstm_forward_hidden(params, tokens, cfg, collect_cache=True)
+    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    s_conv, s_cell = scaches
+    cache = {
+        "m_conv": mcaches.conv,
+        "m_state": mcaches.state,
+        "s_conv": s_conv,
+        "s_c": s_cell.c,
+        "s_n": s_cell.n,
+        "s_h": s_cell.h,
+    }
+    return logits, cache

@@ -1,0 +1,478 @@
+"""Shared transformer layers: norms, RoPE, flash attention, MLP, MoE.
+
+Pure-JAX (jnp + lax) implementations designed to lower efficiently under
+GSPMD on the production mesh:
+
+* attention is computed flash-style — an online-softmax ``lax.scan`` over KV
+  chunks — so no S×S score matrix is ever materialized (mandatory for the
+  32k/500k assigned shapes);
+* the MoE uses capacity-based scatter dispatch (GShard-style but with index
+  arithmetic instead of the T×E×C one-hot, which would not fit memory at the
+  1M-token prefill cell);
+* all activations carry logical-axis sharding annotations via
+  ``repro.distributed.sharding.shard``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 *accumulation* but no materialized f32 copy of x.
+
+    The sum-of-squares is an einsum with f32 accumulation, so neither forward
+    nor backward ever holds convert(x, f32) as a tensor.  This matters under
+    scan-over-layers remat: the backward loop reads the saved bf16 residual
+    stack, and any direct f32 use of it gets LICM-hoisted by XLA into a full
+    f32 copy of the *entire stack* (measured: +11.3 GB/device on the qwen2
+    train_4k cell with the naive cast-first implementation).
+    """
+    d = x.shape[-1]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    scale = jax.lax.rsqrt(ss / d + eps)[..., None].astype(x.dtype)
+    return x * scale * weight.astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    """LayerNorm, same no-materialized-f32-x discipline as rms_norm."""
+    d = x.shape[-1]
+    mu = (jnp.sum(x, axis=-1, dtype=jnp.float32) / d)[..., None]
+    ss = jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)
+    var = jnp.maximum(ss / d - mu[..., 0] ** 2, 0.0)
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(jnp.float32)
+    out = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return out * weight.astype(x.dtype) + bias.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, n, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if angles.ndim == 2:  # (S, hd/2) → broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: jax.Array | int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+    chunk: int = 1024,
+    q_chunk: Optional[int] = None,
+    kv_pos_offset: int = 0,
+    unroll: bool = False,
+) -> jax.Array:
+    """2-D blocked online-softmax attention; never materializes (Sq, Sk).
+
+    ``q_chunk``: block the query dim too (training memory: the backward pass
+    of one rematted layer then peaks at one (q_chunk × chunk) score tile per
+    KV step instead of (Sq × chunk) tiles for *all* steps).  Q blocks are a
+    static python loop, so causal/window cells statically SKIP fully-masked
+    KV chunks — saving the ~2× flops a naive causal lowering wastes.
+
+    ``q_offset``: absolute position of q[0] (decode: the cache index).
+    ``kv_valid_len``: keys at positions ≥ this are masked (decode: index+1).
+    ``kv_pos_offset``: absolute position of k[0] (internal, for Q blocking).
+    """
+    b, sq, h, hd = q.shape
+    if q_chunk is not None and sq > q_chunk and sq % q_chunk == 0:
+        sk = k.shape[1]
+        outs = []
+        for i in range(sq // q_chunk):
+            qs = i * q_chunk
+            q_blk = q[:, qs : qs + q_chunk]
+            # Static KV-range skip: causal ⇒ keys after this block's last
+            # query are fully masked; window ⇒ keys more than `window` before
+            # this block's first query are fully masked.
+            hi = sk
+            lo = 0
+            if causal and isinstance(q_offset, int):
+                hi = min(sk, _ceil_to(q_offset + qs + q_chunk, chunk))
+            if window is not None and isinstance(q_offset, int):
+                lo = max(0, ((q_offset + qs - window) // chunk) * chunk)
+            blk = functools.partial(
+                flash_attention,
+                causal=causal,
+                window=window,
+                q_offset=(q_offset + qs) if isinstance(q_offset, int) else q_offset,
+                kv_valid_len=kv_valid_len,
+                chunk=chunk,
+                q_chunk=None,
+                kv_pos_offset=lo,
+                unroll=unroll,
+            )
+            outs.append(jax.checkpoint(blk)(q_blk, k[:, lo:hi], v[:, lo:hi]))
+        return jnp.concatenate(outs, axis=1)
+
+    _, sk, kv, _ = k.shape
+    g = h // kv
+    chunk = min(chunk, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    qg = q.reshape(b, sq, kv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = jnp.asarray(q_offset, jnp.int32) + jnp.arange(sq, dtype=jnp.int32)
+    valid_len = jnp.asarray(
+        (sk + kv_pos_offset) if kv_valid_len is None else kv_valid_len, jnp.int32
+    )
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        chunk_idx, k_blk, v_blk = inputs
+        k_start = kv_pos_offset + chunk_idx * chunk
+        k_pos = k_start + jnp.arange(chunk, dtype=jnp.int32)
+        s = (
+            jnp.einsum(
+                "bskgh,bckh->bkgsc", qg, k_blk, preferred_element_type=jnp.float32
+            )
+            * scale
+        )  # (B, KV, G, Sq, C)
+        mask = k_pos[None, :] < valid_len  # (1, C) — padded/unwritten keys
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        mask = mask[None, None, None]  # (1,1,1,Sq,C)
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bkgsc,bckh->bkgsh",
+            p.astype(v_blk.dtype),
+            v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    # Checkpoint per KV chunk: backward recomputes the (Sq × chunk) score/prob
+    # tiles instead of stacking them across chunks — the f32 p-tile stacks
+    # would otherwise dominate training memory (measured: 20 GB/device at the
+    # qwen2 train_4k cell before this remat).
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (m0, l0, a0),
+        (jnp.arange(n_chunks, dtype=jnp.int32), kc, vc),
+        unroll=unroll,
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]  # (B, KV, G, Sq, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + optional bias / qk-norm / window / cross)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs: Dict[str, ParamSpec] = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ParamSpec((h, hd), ("heads", None), init="zeros")
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", None), init="zeros")
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), (None,), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), (None,), init="ones")
+    if cross:
+        specs["gate"] = ParamSpec((), (), init="zeros")  # tanh-gated injection
+    return specs
+
+
+def project_qkv(params, x, cfg: ModelConfig, positions=None, rope: bool = True):
+    """Shared q/k/v projection path (bias, qk-norm, RoPE)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # "seq_act" is None by default; a rules override maps it to "model" for
+    # sequence-parallel attention (each model shard computes a slice of the
+    # query positions — the fallback TP for archs whose head counts cannot
+    # shard; see §Perf).
+    q = shard(q, "batch", "seq_act", "heads", None)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    return q, k, v
+
+
+def self_attention(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    rope: bool = True,
+) -> jax.Array:
+    q, k, v = project_qkv(params, x, cfg, positions, rope=rope)
+    out = flash_attention(
+        q, k, v, causal=causal, window=cfg.window, chunk=cfg.attn_chunk,
+        q_chunk=cfg.q_chunk, unroll=not cfg.scan_layers,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def decode_attention(
+    params,
+    x_step: jax.Array,  # (B, 1, D)
+    cache_k: jax.Array,  # (B, S, KV, hd)
+    cache_v: jax.Array,
+    index: jax.Array,  # scalar int32: tokens already in cache
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a KV cache; returns (out, new_k, new_v)."""
+    pos = index[None] if index.ndim == 0 else index
+    q, k_new, v_new = project_qkv(params, x_step, cfg, pos, rope=rope)
+    s_ctx = cache_k.shape[1]
+    if window is not None and s_ctx == window:
+        # Ring-buffer cache for sliding-window attention: positions rotate.
+        slot = jnp.mod(index, window)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, slot, 0, 0))
+        # All slots valid once cache is full; mask handled by valid_len.
+        out = flash_attention(
+            q,
+            cache_k,
+            cache_v,
+            causal=False,
+            q_offset=index,
+            kv_valid_len=jnp.minimum(index + 1, window),
+            chunk=cfg.attn_chunk,
+            unroll=not cfg.scan_layers,
+        )
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, index, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, index, 0, 0))
+        out = flash_attention(
+            q,
+            cache_k,
+            cache_v,
+            causal=False,
+            q_offset=index,
+            kv_valid_len=index + 1,
+            chunk=cfg.attn_chunk,
+            unroll=not cfg.scan_layers,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, cache_k, cache_v
+
+
+def cross_attention(params, x, kv_feats, cfg: ModelConfig) -> jax.Array:
+    """Gated cross-attention (VLM image layers / whisper decoder)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_feats, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_feats, params["wv"])
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    out = flash_attention(
+        q, k, v, causal=False, chunk=cfg.attn_chunk, q_chunk=cfg.q_chunk,
+        unroll=not cfg.scan_layers,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "gate" in params:
+        y = jnp.tanh(params["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y
+
+
+def cross_attention_cached(params, x_step, cross_k, cross_v, params_cfg):
+    """Decode-time cross-attention against precomputed (B,Skv,H,hd) K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x_step, params["wq"])
+    out = flash_attention(
+        q, cross_k, cross_v, causal=False, chunk=params_cfg.attn_chunk,
+        unroll=not params_cfg.scan_layers,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    if "gate" in params:
+        y = jnp.tanh(params["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_specs(d: int, f: int) -> Dict[str, ParamSpec]:
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp")),
+        "wu": ParamSpec((d, f), ("embed", "mlp")),
+        "wd": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"])
+
+
+def gelu_mlp_specs(d: int, f: int) -> Dict[str, ParamSpec]:
+    return {
+        "w1": ParamSpec((d, f), ("embed", "mlp")),
+        "b1": ParamSpec((f,), ("mlp",), init="zeros"),
+        "w2": ParamSpec((f, d), ("mlp", "embed")),
+        "b2": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"]) + params["b1"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"]) + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: capacity-based scatter dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    # expert d-dims get their own logical axis: fine-grained MoE (granite,
+    # 1.5 MB expert matrices) wants them REPLICATED over data (else GSPMD
+    # psums the giant dispatch buffers instead of gathering tiny weights),
+    # while coarse MoE (arctic, 3.6 GB/layer of experts) needs FSDP.
+    specs = {
+        "router": ParamSpec((d, e), ("embed", "experts"), dtype=jnp.float32),
+        "wg": ParamSpec((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wu": ParamSpec((e, d, f), ("experts", "expert_embed", "expert_mlp")),
+        "wd": ParamSpec((e, f, d), ("experts", "expert_mlp", "expert_embed")),
+    }
+    if cfg.d_ff_dense:
+        specs["dense"] = swiglu_specs(d, cfg.d_ff_dense)
+    return specs
+
+
+def moe_ffn(params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Top-k capacity-dispatch MoE; returns (output, load-balance aux loss).
+
+    Dispatch is PER EXAMPLE (group = one sequence): each (token, expert)
+    pair's rank comes from a one-hot cumsum along its own sequence, with
+    capacity C = ⌈cf·k·S/E⌉ per example.  Keeping dispatch batch-local means
+    the scatter/gather never crosses data shards — GSPMD lowers the block
+    with zero dispatch collectives; only expert weights move (FSDP gather)
+    or tokens move (all-to-all under expert parallelism), never a global
+    (B·S·k, E) cumsum.  The first (global-cumsum) implementation cost 431 s
+    of collectives and 97 GB/device on the granite train_4k dry-run cell;
+    this one is batch-local (see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # Load-balance aux (Switch): E · Σ_e fraction_e · prob_e.
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=2), axis=(0, 1)
+    )
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(math.ceil(cfg.capacity_factor * k * s / e))
+    e_flat = idx.reshape(b, s * k)  # (B, S·k)
+    oh = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # batch-local one-hot
+    pos = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=1) - 1, e_flat[..., None], axis=-1
+    )[..., 0]
+    keep = pos < capacity
+    dst = jnp.where(keep, e_flat * capacity + pos, e * capacity)  # (B, S·k)
+
+    x_rep = jnp.repeat(x, k, axis=1)  # (B, S·k, D)
+    bidx = jnp.arange(b)[:, None]
+    buf = jnp.zeros((b, e * capacity + 1, d), x.dtype).at[bidx, dst].set(x_rep)
+    h = buf[:, : e * capacity].reshape(b, e, capacity, d)
+    h = shard(h, "batch", "experts", None, None)
+    g = jnp.einsum("becd,edf->becf", h, params["wg"])
+    u = jnp.einsum("becd,edf->becf", h, params["wu"])
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("becf,efd->becd", y, params["wd"])
+    y = shard(y, "batch", "experts", None, None)
+    yf = jnp.concatenate(
+        [y.reshape(b, e * capacity, d), jnp.zeros((b, 1, d), x.dtype)], axis=1
+    )
+    out_pairs = yf[bidx, dst] * (
+        gates.reshape(b, s * k, 1) * keep[..., None]
+    ).astype(x.dtype)
+    out = jnp.sum(out_pairs.reshape(b, s, k, d), axis=2)
+    if "dense" in params:
+        out = out + swiglu(params["dense"], x)
+    return out, aux

@@ -1,0 +1,176 @@
+"""Model dispatch: one uniform interface over the five architecture families.
+
+``get_model(cfg)`` returns a :class:`Model` whose members close over the
+config:
+
+* ``param_specs``      — ParamSpec tree (init / abstract / shard from one def)
+* ``loss_fn``          — (params, batch) → (scalar loss, metrics dict)
+* ``prefill_fn``       — (params, batch) → (last logits, populated cache)
+* ``decode_fn``        — (params, cache, token, index) → (logits, new cache)
+* ``cache_specs``      — (batch, seq_len) → ParamSpec tree for the decode cache
+
+``batch`` dicts carry family-appropriate inputs: ``tokens``/``labels`` always;
+``vision`` (vlm) or ``frames`` (encdec) when the modality stub applies.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import encdec as E
+from repro.models import hybrid as H
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+MOE_AUX_WEIGHT = 0.01
+
+# Encoder memory length for enc-dec *decode* cells: the audio context is
+# bounded by the model's 30 s window (Whisper large-v3 emits 1500 frames);
+# the assigned seq_len applies to the decoder self-cache.
+ENCDEC_DECODE_MEMORY_LEN = 1500
+# Decoder prompt length for enc-dec *prefill* cells (task/prompt tokens);
+# the assigned seq_len applies to the encoder frames being prefilled.
+ENCDEC_PREFILL_PROMPT_LEN = 16
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    param_specs: Any
+    loss_fn: Callable[[Any, Dict[str, jax.Array]], tuple]
+    prefill_fn: Callable[[Any, Dict[str, jax.Array]], tuple]
+    decode_fn: Callable[[Any, Any, jax.Array, jax.Array], tuple]
+    cache_specs: Callable[[int, int], Any]
+
+
+def chunked_cross_entropy(
+    x: jax.Array,  # (B, S, D) final hidden states
+    w: jax.Array,  # (D, V) lm head
+    labels: jax.Array,  # (B, S) int32
+    chunk: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Sequence-chunked softmax CE: never materializes the (B, S, V) logits.
+
+    The backward pass recomputes each chunk's logits (jax.checkpoint), so peak
+    memory is O(B·chunk·V) instead of O(B·S·V) — at the 152k-vocab train_4k
+    cell that is the difference between 0.6 GB and 2.5 GB per device of logit
+    activations.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} must be a multiple of loss chunk {chunk}"
+    n = s // chunk
+    xs = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ys = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        xc, yc = inp
+        logits = jnp.einsum("bcd,dv->bcv", xc, w).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.float32(0.0), (xs, ys), unroll=unroll
+    )
+    return total / (b * s)
+
+
+def _head_weight(params, cfg: ModelConfig) -> jax.Array:
+    if cfg.family == "encdec" or cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    family = cfg.family
+
+    if family in ("dense", "moe", "vlm"):
+
+        def loss_fn(params, batch):
+            x, aux, _ = T.forward_hidden(
+                params, batch["tokens"], cfg, vision=batch.get("vision")
+            )
+            ce = chunked_cross_entropy(x, _head_weight(params, cfg), batch["labels"], chunk=cfg.loss_chunk, unroll=not cfg.scan_layers)
+            loss = ce + MOE_AUX_WEIGHT * aux if family == "moe" else ce
+            return loss, {"ce": ce, "moe_aux": aux}
+
+        def prefill_fn(params, batch):
+            return T.prefill(params, batch["tokens"], cfg, vision=batch.get("vision"))
+
+        def decode_fn(params, cache, token, index):
+            return T.decode_step(params, cache, token, index, cfg)
+
+        return Model(
+            cfg=cfg,
+            param_specs=T.build_param_specs(cfg),
+            loss_fn=loss_fn,
+            prefill_fn=prefill_fn,
+            decode_fn=decode_fn,
+            cache_specs=lambda b, s: T.init_cache_specs(cfg, b, s),
+        )
+
+    if family == "encdec":
+
+        def loss_fn(params, batch):
+            memory = E.encode(params, batch["frames"], cfg)
+            x, _ = E.decode_sequence(params, memory, batch["tokens"], cfg)
+            ce = chunked_cross_entropy(x, _head_weight(params, cfg), batch["labels"], chunk=cfg.loss_chunk, unroll=not cfg.scan_layers)
+            return ce, {"ce": ce, "moe_aux": jnp.float32(0.0)}
+
+        def prefill_fn(params, batch):
+            return E.prefill(params, batch["frames"], batch["tokens"], cfg)
+
+        def decode_fn(params, cache, token, index):
+            return E.decode_step(params, cache, token, index, cfg)
+
+        return Model(
+            cfg=cfg,
+            param_specs=E.build_param_specs(cfg),
+            loss_fn=loss_fn,
+            prefill_fn=prefill_fn,
+            decode_fn=decode_fn,
+            cache_specs=lambda b, s: E.init_cache_specs(
+                cfg, b, s, ENCDEC_DECODE_MEMORY_LEN
+            ),
+        )
+
+    if family == "zamba":
+
+        def loss_fn(params, batch):
+            x, _ = H.zamba_forward_hidden(params, batch["tokens"], cfg)
+            ce = chunked_cross_entropy(x, _head_weight(params, cfg), batch["labels"], chunk=cfg.loss_chunk, unroll=not cfg.scan_layers)
+            return ce, {"ce": ce, "moe_aux": jnp.float32(0.0)}
+
+        return Model(
+            cfg=cfg,
+            param_specs=H.zamba_param_specs(cfg),
+            loss_fn=loss_fn,
+            prefill_fn=lambda p, b: H.zamba_prefill(p, b["tokens"], cfg),
+            decode_fn=lambda p, c, t, i: H.zamba_decode_step(p, c, t, i, cfg),
+            cache_specs=lambda b, s: H.zamba_cache_specs(cfg, b, s),
+        )
+
+    if family == "xlstm":
+
+        def loss_fn(params, batch):
+            x, _ = H.xlstm_forward_hidden(params, batch["tokens"], cfg)
+            ce = chunked_cross_entropy(x, _head_weight(params, cfg), batch["labels"], chunk=cfg.loss_chunk, unroll=not cfg.scan_layers)
+            return ce, {"ce": ce, "moe_aux": jnp.float32(0.0)}
+
+        return Model(
+            cfg=cfg,
+            param_specs=H.xlstm_param_specs(cfg),
+            loss_fn=loss_fn,
+            prefill_fn=lambda p, b: H.xlstm_prefill(p, b["tokens"], cfg),
+            decode_fn=lambda p, c, t, i: H.xlstm_decode_step(p, c, t, i, cfg),
+            cache_specs=lambda b, s: H.xlstm_cache_specs(cfg, b, s),
+        )
+
+    raise ValueError(f"unknown family {family!r}")

@@ -1,0 +1,157 @@
+"""Parameter specification trees: one definition serves init, dry-run, sharding.
+
+Models declare their parameters as trees of :class:`ParamSpec` (shape +
+logical axis names + init recipe).  From one spec tree we derive:
+
+* materialized parameters for the CPU smoke tests (``materialize``),
+* ``ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (``abstract``),
+* ``NamedSharding`` trees from a logical→mesh axis rule table (``shardings``).
+
+Logical axis names used across the zoo:
+``batch, seq, embed, mlp, heads, kv_heads, head_dim, qk_dim, vocab, experts,
+expert_mlp, layers, stack, conv, state, vision, null``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: float = 0.02  # stddev for normal init
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    std = spec.scale if spec.init == "normal" else 1.0
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def materialize(tree, key: jax.Array):
+    """Instantiate every ParamSpec in the tree with PRNG-seeded values."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(l, k) if is_spec(l) else l for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def logical_to_pspec(
+    axes: Tuple[Optional[str], ...],
+    rules: Dict[str, Any],
+    shape: Optional[Tuple[int, ...]] = None,
+    axis_sizes: Optional[Dict[str, int]] = None,
+) -> P:
+    """Map logical axis names to a PartitionSpec using the rule table.
+
+    With ``shape`` + ``axis_sizes`` (mesh axis → size), mesh axes whose size
+    does not divide the tensor dim are dropped (divisibility-aware fallback).
+    """
+    entries = []
+    used: set = set()
+
+    def _flat(v):
+        return v if isinstance(v, tuple) else (v,)
+
+    for i, name in enumerate(axes):
+        target = rules.get(name) if name else None
+        if target is None:
+            entries.append(None)
+            continue
+        # Never map two tensor dims onto the same mesh axis.
+        taken = tuple(a for a in _flat(target) if a not in used)
+        if taken and shape is not None and axis_sizes is not None:
+            # jit input shardings require even partitioning: drop trailing
+            # mesh axes until the shard count divides the dim (e.g. 8 KV
+            # heads cannot shard over a 16-way model axis → replicated; the
+            # fallback shows up in the §Roofline useful-flops ratio).
+            dim = shape[i]
+            while taken:
+                prod = 1
+                for a in taken:
+                    prod *= axis_sizes.get(a, 1)
+                if prod and dim % prod == 0:
+                    break
+                taken = taken[:-1]
+        if not taken:
+            entries.append(None)
+            continue
+        used.update(taken)
+        entries.append(taken if len(taken) > 1 else taken[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def pspecs(tree, rules: Dict[str, Any], axis_sizes: Optional[Dict[str, int]] = None):
+    """PartitionSpec tree from a ParamSpec tree + rule table."""
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.axes, rules, s.shape, axis_sizes),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def shardings(tree, rules: Dict[str, Any], mesh: Mesh):
+    sizes = mesh_axis_sizes(mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_pspec(s.axes, rules, s.shape, sizes)),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def count_params(tree) -> int:
+    """Total parameter count of a spec tree (for 6·N·D roofline math)."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        if is_spec(leaf):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n
+    return total
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        if is_spec(leaf):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            total += n * jnp.dtype(leaf.dtype).itemsize
+    return total

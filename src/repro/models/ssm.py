@@ -1,0 +1,180 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid architecture.
+
+Chunked SSD forward (Dao & Gu 2024): within a chunk the recurrence is a
+masked attention-like contraction; across chunks a compact (H, P, N) state is
+carried by a ``lax.scan``.  This keeps training memory at
+O(T·Q + T/Q·H·P·N) instead of the O(T·H·P·N) an associative scan would
+materialize — required for the train_4k / prefill_32k cells.  Decode is the
+exact O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array  # (B, conv_w-1, d_conv_channels)
+    state: jax.Array  # (B, H, P, N) f32
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * n  # conv over [x, B, C]
+    proj_out = 2 * di + 2 * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), (None, "mlp")),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), init="zeros"),
+        "a_log": ParamSpec((h,), (None,), dtype=jnp.float32, init="zeros"),
+        "d_skip": ParamSpec((h,), (None,), dtype=jnp.float32, init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), dtype=jnp.float32, init="zeros"),
+        "norm": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time: xbc (B,T,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps beat a conv op under GSPMD
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    gated = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    return (gated * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_forward(params, x: jax.Array, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence SSD forward.  x: (B, T, D) with T % ssm_chunk == 0.
+
+    ``return_cache``: also return the :class:`MambaCache` after the last
+    token (prefill path) — final scan state + the conv input tail.
+    """
+    b, t, _ = x.shape
+    di, n, h, p, q = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk
+    assert t % q == 0, f"T={t} must be a multiple of ssm_chunk={q}"
+    nc = t // q
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_tail = xbc[:, t - (cfg.ssm_conv - 1) :, :]  # pre-conv inputs for decode
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, t, h, p)
+    bmat = xbc[..., di : di + n]  # (B,T,N)
+    cmat = xbc[..., di + n :]  # (B,T,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,T,H)
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    a_log_step = dt * a  # (B,T,H) ≤ 0: per-step log decay
+
+    # chunk views: (nc, B, Q, ...)
+    xs_c = xs.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    b_c = bmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    al_c = a_log_step.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+
+    def chunk_body(state, inp):
+        x_k, b_k, c_k, dt_k, al_k = inp  # (B,Q,...)
+        cum = jnp.cumsum(al_k, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: y_t += C_t · Σ_{s≤t} exp(cum_t − cum_s) dt_s B_s x_s
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Qt,Qs,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)  # (B,Q,Q,H)
+        cb = jnp.einsum("bqn,bsn->bqs", c_k, b_k, preferred_element_type=jnp.float32)
+        scores = cb[..., None] * lmat  # (B,Qt,Qs,H)
+        xdt = x_k.astype(jnp.float32) * dt_k[..., None]  # (B,Q,H,P)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", scores, xdt)
+        # inter-chunk: y_t += C_t · exp(cum_t) · h_prev
+        y_inter = jnp.einsum(
+            "bqn,bhpn,bqh->bqhp", c_k.astype(jnp.float32), state, jnp.exp(cum)
+        )
+        # state update: h' = exp(cum_Q) h + Σ_s exp(cum_Q − cum_s) dt_s B_s x_s
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        h_new = state * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+            "bsn,bshp,bsh->bhpn", b_k.astype(jnp.float32), xdt, decay_end
+        )
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h0 = shard(h0, "batch", "heads", None, None)
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0, (xs_c, b_c, c_c, dt_c, al_c), unroll=not cfg.scan_layers
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    y = y + xs.astype(jnp.float32).astype(y.dtype) * params["d_skip"].astype(y.dtype)[
+        None, None, :, None
+    ]
+    y = _gated_norm(y.reshape(b, t, di), z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    if return_cache:
+        return out, MambaCache(conv=conv_tail, state=h_final)
+    return out
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    di, n = cfg.d_inner, cfg.ssm_state
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, n), jnp.float32),
+    )
+
+
+def mamba_decode_step(
+    params, x_step: jax.Array, cache: MambaCache, cfg: ModelConfig
+) -> Tuple[jax.Array, MambaCache]:
+    """Exact O(1) recurrence for one token.  x_step: (B, 1, D)."""
+    b = x_step.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("btd,de->bte", x_step, params["in_proj"])
+    z, xbc_new, dt_raw = _split_proj(cfg, zxbcdt)
+    # causal conv over the rolling buffer
+    window = jnp.concatenate([cache.conv, xbc_new], axis=1)  # (B, K, C)
+    w = params["conv_w"].astype(jnp.float32)
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+        + params["conv_b"].astype(jnp.float32)
+    ).astype(x_step.dtype)[:, None, :]
+    conv_next = window[:, 1:, :]
+
+    xs = xbc[..., :di].reshape(b, h, p)
+    bvec = xbc[..., di : di + n].reshape(b, n)
+    cvec = xbc[..., di + n :].reshape(b, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    xdt = xs.astype(jnp.float32) * dt[..., None]  # (B,H,P)
+    state = cache.state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bvec.astype(jnp.float32), xdt
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, cvec.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x_step.dtype)
+    y = _gated_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    return out, MambaCache(conv=conv_next, state=state)

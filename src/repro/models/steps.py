@@ -1,0 +1,264 @@
+"""Step factories: train_step / prefill_step / serve_step + input specs.
+
+This module is the seam between the model zoo and the launcher: every
+assigned (architecture × shape) cell resolves to one jit-able step function
+plus ``ShapeDtypeStruct`` input stand-ins and PartitionSpec shardings, so the
+multi-pod dry-run, the CPU smoke tests and the real training loop all run the
+*same* code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as optim_lib
+from repro.models import params as P
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model import (
+    ENCDEC_PREFILL_PROMPT_LEN,
+    Model,
+    get_model,
+)
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: Any
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ParamSpec trees: one definition → abstract inputs + shardings)
+# ---------------------------------------------------------------------------
+
+
+def _tok_spec(b: int, s: int) -> P.ParamSpec:
+    return P.ParamSpec((b, s), ("batch", None), dtype=jnp.int32, init="zeros")
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, P.ParamSpec]:
+    """ParamSpec tree for one training/prefill batch of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, P.ParamSpec] = {}
+    if cfg.family == "encdec":
+        specs["frames"] = P.ParamSpec(
+            (b, s, cfg.d_model), ("batch", None, None), dtype=cfg.dtype
+        )
+        dec_len = s if shape.kind == "train" else ENCDEC_PREFILL_PROMPT_LEN
+        specs["tokens"] = _tok_spec(b, dec_len)
+        if shape.kind == "train":
+            specs["labels"] = _tok_spec(b, dec_len)
+        return specs
+    specs["tokens"] = _tok_spec(b, s)
+    if shape.kind == "train":
+        specs["labels"] = _tok_spec(b, s)
+    if cfg.family == "vlm":
+        specs["vision"] = P.ParamSpec(
+            (b, cfg.n_vision_tokens, cfg.vision_dim), ("batch", None, None), dtype=cfg.dtype
+        )
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model):
+    """(cache, token, index) ParamSpec trees for a decode cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = model.cache_specs(b, s)
+    token = _tok_spec(b, 1)
+    index = P.ParamSpec((), (), dtype=jnp.int32, init="zeros")
+    return cache, token, index
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    optimizer: optim_lib.Optimizer,
+    microbatches: int = 1,
+    accum_dtype=jnp.float32,
+):
+    """(TrainState, batch) → (TrainState, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    split along its leading axis and scanned, trading step latency for
+    activation memory.  ``accum_dtype=bfloat16`` halves the gradient-sync
+    wire bytes (the dominant collective in FSDP training — §Perf) at the
+    cost of bf16 accumulation error across microbatches."""
+
+    def loss_fn(params, batch):
+        return model.loss_fn(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_sum, grad_sum = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params, mb)
+                grad_sum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), grad_sum, g
+                )
+                return (loss_sum + l, grad_sum), m
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params
+            )
+            (loss, grads), ms = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zero_grads), mbatches,
+                unroll=not model.cfg.scan_layers,
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        new_params, new_opt, opt_metrics = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill_fn(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, sample: str = "greedy"):
+    """One-token decode: (params, cache, token, index) → (next_token, logits, cache)."""
+
+    def serve_step(params, cache, token, index):
+        logits, new_cache = model.decode_fn(params, cache, token, index)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: everything the dry-run / launcher needs for one cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """A lowered-able program for one (arch × shape) cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    step_fn: Any
+    abstract_args: Tuple[Any, ...]  # ShapeDtypeStructs
+    in_specs: Tuple[Any, ...]  # PartitionSpec trees matching abstract_args
+    donate: Tuple[int, ...] = ()
+
+
+# Auto-microbatching target: per-device tokens per microbatch.  Activation
+# residual stacks scale linearly with this; ~16k tokens keeps the measured
+# CPU-upper-bound temp memory inside the 16 GB v5e HBM budget (EXPERIMENTS.md
+# §Dry-run) while keeping per-microbatch matmuls MXU-saturating.
+MICROBATCH_TOKEN_TARGET = 16384
+
+
+def auto_microbatches(shape: ShapeConfig, dp_size: int) -> int:
+    if shape.kind != "train" or dp_size <= 0:
+        return 1
+    tokens_per_dev = shape.global_batch * shape.seq_len // dp_size
+    mb = max(1, tokens_per_dev // MICROBATCH_TOKEN_TARGET)
+    # must divide the per-shard batch
+    while (shape.global_batch // dp_size) % mb != 0 and mb > 1:
+        mb -= 1
+    return mb
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    rules: Dict[str, Any],
+    optimizer_name: Optional[str] = None,
+    microbatches: int = 0,
+    dp_size: int = 0,
+    axis_sizes: Optional[Dict[str, int]] = None,
+    accum_dtype=jnp.float32,
+) -> CellProgram:
+    """Assemble the step function + abstract inputs + shardings for one cell.
+
+    ``microbatches=0`` → auto (see :func:`auto_microbatches`, needs dp_size).
+    ``axis_sizes``: mesh axis → size, for divisibility-aware sharding.
+    """
+    model = get_model(cfg)
+    pspec_of = lambda tree: P.pspecs(tree, rules, axis_sizes)
+    if microbatches == 0:
+        microbatches = auto_microbatches(shape, dp_size)
+
+    if shape.kind == "train":
+        opt_name = optimizer_name or ("adafactor" if cfg.family == "moe" else "adamw")
+        optimizer = optim_lib.get_optimizer(
+            opt_name, optim_lib.cosine_warmup(3e-4, 2000, 100_000)
+        )
+        train_step = make_train_step(
+            model, optimizer, microbatches=microbatches, accum_dtype=accum_dtype
+        )
+        state_specs = {
+            "step": P.ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+            "params": model.param_specs,
+            "opt": optimizer.state_specs(model.param_specs),
+        }
+        b_specs = batch_specs(cfg, shape)
+        abstract_state = TrainState(**P.abstract(state_specs))
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            kind="train",
+            step_fn=train_step,
+            abstract_args=(abstract_state, P.abstract(b_specs)),
+            in_specs=(TrainState(**pspec_of(state_specs)), pspec_of(b_specs)),
+            donate=(0,),
+        )
+
+    if shape.kind == "prefill":
+        prefill_step = make_prefill_step(model)
+        b_specs = batch_specs(cfg, shape)
+        return CellProgram(
+            name=f"{cfg.name}:{shape.name}",
+            kind="prefill",
+            step_fn=prefill_step,
+            abstract_args=(P.abstract(model.param_specs), P.abstract(b_specs)),
+            in_specs=(pspec_of(model.param_specs), pspec_of(b_specs)),
+        )
+
+    # decode
+    serve_step = make_serve_step(model)
+    cache_specs, token_spec, index_spec = decode_input_specs(cfg, shape, model)
+    return CellProgram(
+        name=f"{cfg.name}:{shape.name}",
+        kind="decode",
+        step_fn=serve_step,
+        abstract_args=(
+            P.abstract(model.param_specs),
+            P.abstract(cache_specs),
+            P.abstract(token_spec),
+            P.abstract(index_spec),
+        ),
+        in_specs=(
+            pspec_of(model.param_specs),
+            pspec_of(cache_specs),
+            pspec_of(token_spec),
+            pspec_of(index_spec),
+        ),
+        donate=(1,),
+    )

@@ -1,0 +1,375 @@
+"""Decoder-only LM assembly: dense / MoE / VLM families.
+
+One parameterized assembly covers codeqwen1.5-7b, qwen2-1.5b, h2o-danube,
+qwen3-4b (dense), granite-moe & arctic-480b (moe) and llama-3.2-vision (vlm).
+
+Layer stacks are *scanned* (`lax.scan` over stacked parameters) so the HLO —
+and therefore compile time and program size on the 512-chip dry-run mesh — is
+O(1) in depth.  Heterogeneous archs (VLM cross-attention every k layers) scan
+over *groups*: each group is (k−1 self layers, 1 cross layer), with the self
+sub-stack scanned inside the group body.
+
+Decode maintains a per-layer KV cache `(L, B, S, KV, hd)`; sliding-window
+archs use a ring buffer of size `window` (h2o-danube at long_500k is bounded
+by its window — the reason it runs the 500k cell at all).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _stack(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim (scanned layers) to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec(
+            (n, *s.shape), (axis_name, *s.axes), dtype=s.dtype, init=s.init, scale=s.scale
+        ),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def self_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attention_specs(cfg),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.family == "moe":
+        specs["moe"] = L.moe_specs(cfg)
+    else:
+        specs["mlp"] = L.swiglu_specs(cfg.d_model, cfg.d_ff)
+    return specs
+
+
+def cross_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "ln1": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "attn": L.attention_specs(cfg, cross=True),
+        "ln2": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": L.swiglu_specs(cfg.d_model, cfg.d_ff),
+        "mlp_gate": ParamSpec((), (), init="zeros"),
+    }
+
+
+def build_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="normal", scale=0.02),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+    if cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_every
+        n_self_per_group = cfg.cross_every - 1
+        specs["blocks"] = _stack(
+            _stack(self_block_specs(cfg), n_self_per_group, "stack"), n_groups
+        )
+        specs["cross_blocks"] = _stack(cross_block_specs(cfg), n_groups)
+        specs["vision_proj"] = ParamSpec((cfg.vision_dim, d), ("vision", "embed"))
+    else:
+        specs["blocks"] = _stack(self_block_specs(cfg), cfg.n_layers)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Block forwards
+# ---------------------------------------------------------------------------
+
+
+def self_block_fwd(p, x, cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.self_attention(p["attn"], h, cfg, positions)
+    x = shard(x, "batch", None, None)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = L.moe_ffn(p["moe"], h, cfg)
+    else:
+        y, aux = L.swiglu(p["mlp"], h), jnp.float32(0.0)
+    x = x + y
+    return shard(x, "batch", None, None), aux
+
+
+def cross_block_fwd(p, x, vis, cfg: ModelConfig) -> jax.Array:
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + L.cross_attention(p["attn"], h, vis, cfg)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    gate = jnp.tanh(p["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * L.swiglu(p["mlp"], h)
+    return shard(x, "batch", None, None)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _zero3_gather(lp, cfg: ModelConfig):
+    """Explicit ZeRO-3 schedule: all-gather this layer's FSDP-sharded weights
+    before use (replicate the embed dims, keep the tensor-parallel dims).
+
+    Without it, GSPMD may resolve matmuls whose contraction dim is
+    FSDP-sharded by partial contraction + *activation* psums — measured at
+    538 GB/device/step on codeqwen train_4k, vs ~105 GB of weight gathers
+    (EXPERIMENTS.md §Perf H8).  Under scan-over-layers only one layer's
+    gathered weights are resident at a time, preserving FSDP memory.
+    """
+    from repro.distributed import sharding as shlib
+    from repro.models.params import is_spec, logical_to_pspec, mesh_axis_sizes
+
+    rules = shlib.current_rules()
+    mesh = shlib.current_mesh()
+    if rules is None or mesh is None:
+        return lp
+    g_rules = dict(rules)
+    g_rules["embed"] = None
+    g_rules["expert_embed"] = None
+    g_rules["vocab"] = None
+    sizes = mesh_axis_sizes(mesh)
+    spec_tree = self_block_specs(cfg)  # same per-layer structure as lp
+
+    def one(leaf, spec):
+        ps = logical_to_pspec(spec.axes, g_rules, spec.shape, sizes)
+        return jax.lax.with_sharding_constraint(
+            leaf, jax.sharding.NamedSharding(mesh, ps)
+        )
+
+    return jax.tree.map(one, lp, spec_tree, is_leaf=lambda t: is_spec(t))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(
+    params,
+    tokens: jax.Array,  # (B, S) int32
+    cfg: ModelConfig,
+    vision: Optional[jax.Array] = None,  # (B, Nv, vision_dim) for vlm
+    collect_kv: bool = False,
+) -> Tuple[jax.Array, jax.Array, Any]:
+    """Token ids → final hidden states.  Returns (hidden, moe_aux, kv_stack).
+
+    ``collect_kv``: also return the per-layer (k, v) tensors (prefill path).
+    """
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    if cfg.family == "vlm":
+        assert vision is not None, "vlm forward requires vision embeddings"
+        vis = jnp.einsum("bnv,vd->bnd", vision.astype(cfg.dtype), params["vision_proj"])
+        vis = shard(vis, "batch", None, None)
+
+        def group_body(carry, gp):
+            xc, aux = carry
+
+            def inner(c, lp):
+                xi, ai = c
+                out = None
+                if collect_kv:
+                    h = L.rms_norm(xi, lp["ln1"], cfg.norm_eps)
+                    _, k, v = L.project_qkv(lp["attn"], h, cfg, positions)
+                    out = (k, v)
+                y, a = self_block_fwd(lp, xi, cfg, positions)
+                return (y, ai + a), out
+
+            inner = _maybe_remat(inner, cfg)
+            (xc, aux), self_kv = jax.lax.scan(
+                inner, (xc, aux), gp["self"], unroll=not cfg.scan_layers
+            )
+            cross_kv = None
+            if collect_kv:
+                cp = gp["cross"]["attn"]
+                xk = jnp.einsum("bnd,dhk->bnhk", vis, cp["wk"])
+                xv = jnp.einsum("bnd,dhk->bnhk", vis, cp["wv"])
+                cross_kv = (xk, xv)
+            xc = cross_block_fwd(gp["cross"], xc, vis, cfg)
+            return (xc, aux), (self_kv, cross_kv)
+
+        grouped = {"self": params["blocks"], "cross": params["cross_blocks"]}
+        (x, aux), kv = jax.lax.scan(
+            group_body, (x, jnp.float32(0.0)), grouped, unroll=not cfg.scan_layers
+        )
+    else:
+        def body(carry, lp):
+            xc, aux = carry
+            if cfg.zero3_gather:
+                lp = _zero3_gather(lp, cfg)
+            y, a = self_block_fwd(lp, xc, cfg, positions)
+            out = None
+            if collect_kv:
+                h = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+                _, k, v = L.project_qkv(lp["attn"], h, cfg, positions)
+                out = (k, v)
+            return (y, aux + a), out
+
+        body = _maybe_remat(body, cfg)
+        (x, aux), kv = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), params["blocks"], unroll=not cfg.scan_layers
+        )
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, kv
+
+
+def lm_head(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(cfg.dtype))
+    logits = shard(logits, "batch", None, "vocab")
+    if cfg.padded_vocab != cfg.vocab:  # mask pad columns (see padded_vocab)
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# KV caches & decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Effective cache length: sliding-window archs keep a ring of `window`."""
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    s = cache_len(cfg, seq_len)
+    kv_spec = ParamSpec(
+        (cfg.n_layers, batch, s, kv, hd),
+        ("layers", "batch", "kv_seq", "kv_heads", None),
+        dtype=cfg.dtype,
+        init="zeros",
+    )
+    cache: Dict[str, Any] = {"k": kv_spec, "v": kv_spec}
+    if cfg.family == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_every
+        n_self = cfg.cross_every - 1
+        self_spec = ParamSpec(
+            (n_groups, n_self, batch, s, kv, hd),
+            ("layers", "stack", "batch", "kv_seq", "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        )
+        cross_spec = ParamSpec(
+            (n_groups, batch, cfg.n_vision_tokens, kv, hd),
+            ("layers", "batch", None, "kv_heads", None),
+            dtype=cfg.dtype,
+            init="zeros",
+        )
+        cache = {"k": self_spec, "v": self_spec, "cross_k": cross_spec, "cross_v": cross_spec}
+    return cache
+
+
+def _decode_self_block(lp, x_step, ck, cv, index, cfg: ModelConfig):
+    h = L.rms_norm(x_step, lp["ln1"], cfg.norm_eps)
+    y, ck, cv = L.decode_attention(
+        lp["attn"], h, ck, cv, index, cfg, window=cfg.window
+    )
+    x_step = x_step + y
+    h = L.rms_norm(x_step, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        y, _ = L.moe_ffn(lp["moe"], h, cfg)
+    else:
+        y = L.swiglu(lp["mlp"], h)
+    return x_step + y, ck, cv
+
+
+def decode_step(
+    params,
+    cache: Dict[str, jax.Array],
+    token: jax.Array,  # (B, 1) int32
+    index: jax.Array,  # scalar int32: number of tokens already cached
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the cache.  Returns (logits (B, V), new cache)."""
+    x = params["embed"].astype(cfg.dtype)[token]  # (B, 1, D)
+    x = shard(x, "batch", None, None)
+
+    if cfg.family == "vlm":
+        def group_body2(x_step, gp):
+            def inner(c, inp):
+                lpi, cki, cvi = inp
+                y, nk, nv = _decode_self_block(lpi, c, cki, cvi, index, cfg)
+                return y, (nk, nv)
+
+            x_step, (nk, nv) = jax.lax.scan(
+                inner, x_step, (gp["self"], gp["ck"], gp["cv"]),
+                unroll=not cfg.scan_layers,
+            )
+            cp = gp["cross"]
+            h = L.rms_norm(x_step, cp["ln1"], cfg.norm_eps)
+            y = L.cross_attention_cached(cp["attn"], h, gp["xk"], gp["xv"], cfg)
+            x_step = x_step + y
+            h = L.rms_norm(x_step, cp["ln2"], cfg.norm_eps)
+            gate = jnp.tanh(cp["mlp_gate"].astype(jnp.float32)).astype(x_step.dtype)
+            x_step = x_step + gate * L.swiglu(cp["mlp"], h)
+            return x_step, (nk, nv)
+
+        xs = {
+            "self": params["blocks"],
+            "cross": params["cross_blocks"],
+            "ck": cache["k"],
+            "cv": cache["v"],
+            "xk": cache["cross_k"],
+            "xv": cache["cross_v"],
+        }
+        x, (nk, nv) = jax.lax.scan(group_body2, x, xs, unroll=not cfg.scan_layers)
+        new_cache = dict(cache, k=nk, v=nv)
+    else:
+        def body(x_step, inp):
+            lp, ck, cv = inp
+            y, nk, nv = _decode_self_block(lp, x_step, ck, cv, index, cfg)
+            return y, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]),
+            unroll=not cfg.scan_layers,
+        )
+        new_cache = {"k": nk, "v": nv}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)[:, 0]  # (B, V)
+    return logits, new_cache
+
+
+def prefill(
+    params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    vision: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence prefill: returns (last-position logits, populated cache)."""
+    x, _, kv = forward_hidden(params, tokens, cfg, vision=vision, collect_kv=True)
+    logits = lm_head(params, x[:, -1:, :], cfg)[:, 0]
+    if cfg.family == "vlm":
+        (self_k, self_v), (cross_k, cross_v) = kv
+        return logits, {
+            "k": self_k,  # (G, n_self, B, S, KV, hd)
+            "v": self_v,
+            "cross_k": cross_k,  # (G, B, Nv, KV, hd)
+            "cross_v": cross_v,
+        }
+    k_stack, v_stack = kv  # (L, B, S, KV, hd)
+    if cfg.window and tokens.shape[1] > cfg.window:
+        k_stack = k_stack[:, :, -cfg.window :]
+        v_stack = v_stack[:, :, -cfg.window :]
+    return logits, {"k": k_stack, "v": v_stack}

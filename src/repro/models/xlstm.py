@@ -1,0 +1,308 @@
+"""xLSTM blocks: chunkwise mLSTM (matrix memory) + recurrent sLSTM.
+
+mLSTM is implemented in its chunkwise linear-attention form — the same
+chunk-scan skeleton as the SSD kernel in ``ssm.py``, with per-head scalar
+forget-gate decays, input-gated keys and an appended ones-column on V that
+carries the normalizer state n (so numerator and denominator share one scan).
+Deviation from the paper's exact exponential input gating: we use sigmoid
+input gates for chunk-parallel stability; the stabilizer-m bookkeeping is a
+kernel-level numerical detail orthogonal to this repo's systems scope
+(recorded in DESIGN.md §Arch-applicability).
+
+sLSTM has true recurrent (block-diagonal per-head) gate weights, so it is a
+sequential ``lax.scan`` over time with O(1) decode — 1/8 of the blocks in the
+assigned xlstm-1.3b layout.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import rms_norm
+
+
+class MLSTMCache(NamedTuple):
+    conv: jax.Array  # (B, conv_w-1, d_inner)
+    state: jax.Array  # (B, H, qk, v+1) f32  (last column = normalizer n)
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, hd) f32
+    n: jax.Array  # (B, H, hd) f32
+    h: jax.Array  # (B, H, hd) f32
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.d_inner  # expand 2
+    h = cfg.n_heads
+    qk = cfg.mlstm_qk_dim
+    vd = di // h
+    return {
+        "w_up": ParamSpec((d, di), ("embed", "mlp")),
+        "w_gate": ParamSpec((d, di), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, di), (None, "mlp")),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros"),
+        "wq": ParamSpec((di, h, qk), ("mlp", "heads", None)),
+        "wk": ParamSpec((di, h, qk), ("mlp", "heads", None)),
+        "wv": ParamSpec((di, h, vd), ("mlp", "heads", None)),
+        "w_if": ParamSpec((di, 2, h), ("mlp", None, "heads"), dtype=jnp.float32),
+        "b_if": ParamSpec((2, h), (None, "heads"), dtype=jnp.float32, init="zeros"),
+        "norm": ParamSpec((h, vd), ("heads", None), init="ones"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv_silu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _head_norm(y: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMS norm: y (B,T,H,vd), w (H,vd)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def mlstm_forward(params, x: jax.Array, cfg: ModelConfig, return_cache: bool = False):
+    """Full-sequence chunkwise mLSTM.  x: (B, T, D), T % ssm_chunk == 0.
+
+    ``return_cache``: also return the :class:`MLSTMCache` after the last token.
+    """
+    b, t, d = x.shape
+    h = cfg.n_heads
+    qkd = cfg.mlstm_qk_dim
+    di = cfg.d_inner
+    vd = di // h
+    q_len = cfg.ssm_chunk
+    assert t % q_len == 0
+    nc = t // q_len
+
+    up = jnp.einsum("btd,de->bte", x, params["w_up"])
+    gate = jnp.einsum("btd,de->bte", x, params["w_gate"])
+    conv = _causal_conv_silu(up, params["conv_w"], params["conv_b"])
+    q = jnp.einsum("bte,ehk->bthk", conv, params["wq"])
+    k = jnp.einsum("bte,ehk->bthk", conv, params["wk"])
+    v = jnp.einsum("bte,ehk->bthk", up, params["wv"])
+    if_gates = (
+        jnp.einsum("bte,egh->btgh", conv.astype(jnp.float32), params["w_if"])
+        + params["b_if"]
+    )
+    i_g = jax.nn.sigmoid(if_gates[:, :, 0])  # (B,T,H)
+    log_f = jax.nn.log_sigmoid(if_gates[:, :, 1])  # (B,T,H) ≤ 0
+
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((b, t, h, 1), jnp.float32)], axis=-1
+    )
+    scale = 1.0 / math.sqrt(qkd)
+
+    def tochunks(arr):
+        return arr.reshape(b, nc, q_len, *arr.shape[2:]).transpose(
+            1, 0, 2, *range(3, arr.ndim + 1)
+        )
+
+    q_c, k_c, v_c = tochunks(q), tochunks(k), tochunks(v_aug)
+    i_c, f_c = tochunks(i_g), tochunks(log_f)
+
+    def chunk_body(state, inp):
+        qk_, kk_, vk_, ik_, fk_ = inp
+        cum = jnp.cumsum(fk_, axis=1)  # (B,Q,H)
+        li = cum[:, :, None, :] - cum[:, None, :, :]
+        tri = jnp.tril(jnp.ones((q_len, q_len), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)  # (B,Qt,Qs,H)
+        att = (
+            jnp.einsum(
+                "bqhn,bshn->bqsh", qk_, kk_, preferred_element_type=jnp.float32
+            )
+            * scale
+        )
+        scores = att * lmat * ik_[:, None, :, :]  # input gate at source position
+        y_intra = jnp.einsum("bqsh,bshv->bqhv", scores, vk_)
+        y_inter = jnp.einsum(
+            "bqhn,bhnv,bqh->bqhv", qk_.astype(jnp.float32) * scale, state, jnp.exp(cum)
+        )
+        decay_end = jnp.exp(cum[:, -1:, :] - cum) * ik_  # (B,Q,H)
+        state_new = state * jnp.exp(cum[:, -1])[..., None, None] + jnp.einsum(
+            "bshn,bshv,bsh->bhnv", kk_.astype(jnp.float32), vk_, decay_end
+        )
+        return state_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, qkd, vd + 1), jnp.float32)
+    s_final, ys = jax.lax.scan(
+        chunk_body, s0, (q_c, k_c, v_c, i_c, f_c), unroll=not cfg.scan_layers
+    )
+    y_all = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, vd + 1)
+    num, den = y_all[..., :vd], y_all[..., vd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = _head_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps)
+    y = y.reshape(b, t, di) * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, params["w_down"])
+    if return_cache:
+        cache = MLSTMCache(conv=up[:, t - (cfg.ssm_conv - 1) :, :], state=s_final)
+        return out, cache
+    return out
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MLSTMCache:
+    h, qk, vd = cfg.n_heads, cfg.mlstm_qk_dim, cfg.d_inner // cfg.n_heads
+    return MLSTMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        state=jnp.zeros((batch, h, qk, vd + 1), jnp.float32),
+    )
+
+
+def mlstm_decode_step(
+    params, x_step: jax.Array, cache: MLSTMCache, cfg: ModelConfig
+) -> Tuple[jax.Array, MLSTMCache]:
+    b = x_step.shape[0]
+    h, qkd = cfg.n_heads, cfg.mlstm_qk_dim
+    di = cfg.d_inner
+    vd = di // h
+    up = jnp.einsum("btd,de->bte", x_step, params["w_up"])
+    gate = jnp.einsum("btd,de->bte", x_step, params["w_gate"])
+    window = jnp.concatenate([cache.conv, up], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum(
+            "bkc,kc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+        )
+        + params["conv_b"].astype(jnp.float32)
+    ).astype(x_step.dtype)[:, None]
+    q = jnp.einsum("bte,ehk->bhk", conv, params["wq"])[:, :, :]  # (B,H,qk)
+    k = jnp.einsum("bte,ehk->bhk", conv, params["wk"])
+    v = jnp.einsum("bte,ehk->bhk", up, params["wv"])  # (B,H,vd)
+    if_g = (
+        jnp.einsum("bte,egh->bgh", conv.astype(jnp.float32), params["w_if"])
+        + params["b_if"]
+    )
+    i_g = jax.nn.sigmoid(if_g[:, 0])  # (B,H)
+    f_g = jnp.exp(jax.nn.log_sigmoid(if_g[:, 1]))  # (B,H)
+    v_aug = jnp.concatenate([v.astype(jnp.float32), jnp.ones((b, h, 1), jnp.float32)], -1)
+    state = cache.state * f_g[..., None, None] + i_g[..., None, None] * jnp.einsum(
+        "bhn,bhv->bhnv", k.astype(jnp.float32), v_aug
+    )
+    scale = 1.0 / math.sqrt(qkd)
+    y_all = jnp.einsum("bhn,bhnv->bhv", q.astype(jnp.float32) * scale, state)
+    num, den = y_all[..., :vd], y_all[..., vd:]
+    y = (num / jnp.maximum(jnp.abs(den), 1.0))[:, None]  # (B,1,H,vd)
+    y = _head_norm(y.astype(x_step.dtype), params["norm"], cfg.norm_eps)
+    y = y.reshape(b, 1, di) * jax.nn.silu(gate.astype(jnp.float32)).astype(x_step.dtype)
+    out = jnp.einsum("bte,ed->btd", y, params["w_down"])
+    return out, MLSTMCache(conv=window[:, 1:], state=state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ff = ((int(math.ceil(4 * d / 3)) + 127) // 128) * 128
+    return {
+        "conv_w": ParamSpec((cfg.ssm_conv, d), (None, "embed")),
+        "conv_b": ParamSpec((d,), ("embed",), init="zeros"),
+        # 4 gates (z, i, f, o): input weights + per-head recurrent weights.
+        "w_gates": ParamSpec((d, 4, h, hd), ("embed", None, "heads", None)),
+        "r_gates": ParamSpec((4, h, hd, hd), (None, "heads", None, None)),
+        "b_gates": ParamSpec((4, h, hd), (None, "heads", None), init="zeros"),
+        "norm": ParamSpec((h, hd), ("heads", None), init="ones"),
+        # post-cell gated FFN (factor 4/3 GLU)
+        "w_ff_up": ParamSpec((d, 2, ff), ("embed", None, "mlp")),
+        "w_ff_down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, gates_x: jax.Array, state: SLSTMCache) -> Tuple[SLSTMCache, jax.Array]:
+    """One time step.  gates_x: (B, 4, H, hd) precomputed input contributions."""
+    r = params["r_gates"].astype(jnp.float32)  # (4,H,hd,hd)
+    rec = jnp.einsum("bhd,ghde->bghe", state.h, r)  # (B,4,H,hd)
+    pre = gates_x.astype(jnp.float32) + rec + params["b_gates"].astype(jnp.float32)
+    z = jnp.tanh(pre[:, 0])
+    i = jax.nn.sigmoid(pre[:, 1])
+    f = jax.nn.sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    c = f * state.c + i * z
+    n = f * state.n + i
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return SLSTMCache(c=c, n=n, h=h_new), h_new
+
+
+def slstm_forward(params, x: jax.Array, cfg: ModelConfig, return_cache: bool = False):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    conv = _causal_conv_silu(x, params["conv_w"], params["conv_b"])
+    gates_x = jnp.einsum("btd,dghe->btghe", conv, params["w_gates"])  # (B,T,4,H,hd)
+
+    def body(state, gx):
+        new_state, h_out = _slstm_cell(params, gx, state)
+        return new_state, h_out
+
+    s0 = SLSTMCache(
+        c=jnp.zeros((b, h, hd), jnp.float32),
+        n=jnp.ones((b, h, hd), jnp.float32),
+        h=jnp.zeros((b, h, hd), jnp.float32),
+    )
+    s_final, hs = jax.lax.scan(body, s0, gates_x.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3)  # (B,T,H,hd)
+    y = _head_norm(y.astype(x.dtype), params["norm"], cfg.norm_eps).reshape(b, t, d)
+    up = jnp.einsum("btd,dgf->btgf", y, params["w_ff_up"])
+    ff = jax.nn.gelu(up[:, :, 0].astype(jnp.float32)).astype(x.dtype) * up[:, :, 1]
+    out = jnp.einsum("btf,fd->btd", ff, params["w_ff_down"])
+    if return_cache:
+        return out, (x[:, t - (cfg.ssm_conv - 1) :, :], s_final)
+    return out
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    cell = SLSTMCache(
+        c=jnp.zeros((batch, h, hd), jnp.float32),
+        n=jnp.ones((batch, h, hd), jnp.float32),
+        h=jnp.zeros((batch, h, hd), jnp.float32),
+    )
+    conv = jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_model), dtype)
+    return (conv, cell)
+
+
+def slstm_decode_step(params, x_step, cache, cfg: ModelConfig):
+    conv_buf, cell = cache
+    b, _, d = x_step.shape
+    window = jnp.concatenate([conv_buf, x_step], axis=1)
+    conv = jax.nn.silu(
+        jnp.einsum(
+            "bkc,kc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+        )
+        + params["conv_b"].astype(jnp.float32)
+    ).astype(x_step.dtype)[:, None]
+    gx = jnp.einsum("btd,dghe->bghe", conv, params["w_gates"])
+    new_cell, h_out = _slstm_cell(params, gx, cell)
+    h = cfg.n_heads
+    hd = d // h
+    y = _head_norm(
+        h_out[:, None].astype(x_step.dtype).reshape(b, 1, h, hd), params["norm"], cfg.norm_eps
+    ).reshape(b, 1, d)
+    up = jnp.einsum("btd,dgf->btgf", y, params["w_ff_up"])
+    ff = jax.nn.gelu(up[:, :, 0].astype(jnp.float32)).astype(x_step.dtype) * up[:, :, 1]
+    out = jnp.einsum("btf,fd->btd", ff, params["w_ff_down"])
+    return out, (window[:, 1:], new_cell)

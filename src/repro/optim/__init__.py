@@ -1,0 +1,232 @@
+"""Optimizers built in-repo (no optax): AdamW and Adafactor + schedules.
+
+Both optimizers expose the same triple:
+
+* ``init(params) → state``
+* ``update(grads, state, params) → (new_params, new_state, metrics)``
+* ``state_specs(param_specs) → ParamSpec tree``  — so the dry-run can lower
+  the *full* train step (params + optimizer state) with correct shardings
+  and the memory analysis accounts for optimizer bytes.
+
+Adafactor (factored second moments, no first moment by default) is the
+production choice for the very large MoE cells (arctic-480b): AdamW's
+8 bytes/param of f32 state does not fit the per-device HBM budget at 256
+chips, Adafactor's ~0 extra does (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec, is_spec
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    """Linear warmup to ``peak_lr`` then cosine decay to ``floor``·peak."""
+
+    def fn(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Shared utilities
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any, Dict[str, jax.Array]]]
+    state_specs: Callable[[Any], Any]
+
+
+def _like_specs(param_specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.axes, dtype=dtype, init="zeros"),
+        param_specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(
+    schedule: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros), "count": jnp.int32(0)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(count)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(
+                jnp.float32
+            )
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"m": new_m, "v": new_v, "count": count}, metrics
+
+    def state_specs(param_specs):
+        return {
+            "m": _like_specs(param_specs),
+            "v": _like_specs(param_specs),
+            "count": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+_FACTOR_MIN_SIZE = 128  # don't factor tiny tensors
+
+
+def _factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= _FACTOR_MIN_SIZE and shape[-2] >= _FACTOR_MIN_SIZE
+
+
+def adafactor(
+    schedule: Schedule,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        def one(p):
+            if _factorable(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(one, params),
+            "count": jnp.int32(0),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(count)
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)  # increasing decay
+
+        def upd(g, st, p):
+            g2 = g * g + eps
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps
+                    )
+                )
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(v)
+                new_st = {"v": v}
+            u = g / jnp.maximum(denom, eps)
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            step = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), new_st
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_stats = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"stats": new_stats, "count": count}, metrics
+
+    def state_specs(param_specs):
+        def one(s):
+            if _factorable(s.shape):
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], jnp.float32, init="zeros"),
+                    "vc": ParamSpec(
+                        s.shape[:-2] + s.shape[-1:],
+                        s.axes[:-2] + s.axes[-1:],
+                        jnp.float32,
+                        init="zeros",
+                    ),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, jnp.float32, init="zeros")}
+
+        return {
+            "stats": jax.tree.map(one, param_specs, is_leaf=is_spec),
+            "count": ParamSpec((), (), dtype=jnp.int32, init="zeros"),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,12 @@
+"""Shared pytest configuration.
+
+Deliberately does NOT set XLA_FLAGS: smoke tests and benches must see the 1
+real CPU device; only launch/dryrun.py (its own process) forces 512
+placeholder devices, and the multi-device test spawns its own subprocess.
+"""
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-minute tests (subprocess compiles)")

@@ -1,0 +1,81 @@
+"""Coupling arithmetic: serialized schedule ≡ parallel schedule (bit-exact)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import coupling
+
+
+def _random_instance(rng, n, batch=None):
+    w = jnp.asarray(rng.integers(-15, 16, (n, n)), jnp.int8)
+    shape = (n,) if batch is None else (batch, n)
+    sigma = jnp.asarray(rng.choice([-1, 1], shape), jnp.int8)
+    return w, sigma
+
+
+@pytest.mark.parametrize("n,chunk", [(8, 1), (48, 2), (64, 16), (506, 11), (128, 128)])
+def test_serial_equals_parallel(n, chunk):
+    rng = np.random.default_rng(n)
+    w, sigma = _random_instance(rng, n)
+    s_par = coupling.weighted_sum_parallel(w, sigma)
+    s_ser = coupling.weighted_sum_serial(w, sigma, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(s_par), np.asarray(s_ser))
+
+
+def test_batched_serial_equals_parallel():
+    rng = np.random.default_rng(7)
+    w, sigma = _random_instance(rng, 32, batch=5)
+    np.testing.assert_array_equal(
+        np.asarray(coupling.weighted_sum_parallel(w, sigma)),
+        np.asarray(coupling.weighted_sum_serial(w, sigma, chunk=8)),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_serialization_invariance(n, seed):
+    """Hybrid serialization never changes the integer sum, for any chunking."""
+    rng = np.random.default_rng(seed)
+    w, sigma = _random_instance(rng, n)
+    ref = coupling.weighted_sum_parallel(w, sigma)
+    for chunk in {1, 2, n // 2, n}:
+        if chunk and n % chunk == 0:
+            got = coupling.weighted_sum_serial(w, sigma, chunk=chunk)
+            np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_sum_exactness_bounds():
+    """|S| ≤ N·qmax always fits int32 (accumulator-width claim)."""
+    n = 506
+    w = jnp.full((n, n), 15, jnp.int8)
+    sigma = jnp.ones((n,), jnp.int8)
+    s = coupling.weighted_sum_parallel(w, sigma)
+    assert int(s[0]) == n * 15  # no overflow
+
+    rng = np.random.default_rng(0)
+    w, sigma = _random_instance(rng, n)
+    assert np.all(np.abs(np.asarray(coupling.weighted_sum_parallel(w, sigma))) <= n * 15)
+
+
+def test_element_scaling_orders():
+    """Paper Table 1 + §3: adders N² (recurrent) vs N (hybrid)."""
+    assert coupling.adders_required_parallel(48) == 48 * 47
+    assert coupling.adders_required_serial(48) == 48
+    assert coupling.adders_required_parallel(506) / coupling.adders_required_serial(
+        506
+    ) == 505
+    assert coupling.serialization_factor(506) >= 506
+
+
+def test_shape_validation():
+    w = jnp.zeros((4, 5), jnp.int8)
+    with pytest.raises(ValueError):
+        coupling.weighted_sum_parallel(w, jnp.ones((5,), jnp.int8))
+    with pytest.raises(ValueError):
+        coupling.weighted_sum_serial(jnp.zeros((4, 4), jnp.int8), jnp.ones((4,), jnp.int8), chunk=3)

@@ -1,0 +1,57 @@
+"""End-to-end launcher tests: train loop (checkpoint/restart), serving loop,
+ONN retrieval service."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.retrieve import build_onn, serve_requests
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    out = train(
+        "qwen2-1.5b", reduced=True, steps=30, batch=4, seq_len=64,
+        ckpt_dir=str(tmp_path), ckpt_every=10, log_every=0, lr=1e-3,
+    )
+    assert out["status"] == "completed"
+    assert out["final_step"] == 30
+    assert out["last_loss"] < out["first_loss"], (
+        f"loss did not decrease: {out['first_loss']} → {out['last_loss']}"
+    )
+
+
+def test_train_resume_continues(tmp_path):
+    d = str(tmp_path)
+    out1 = train("qwen2-1.5b", reduced=True, steps=10, batch=4, seq_len=64,
+                 ckpt_dir=d, ckpt_every=5, log_every=0)
+    out2 = train("qwen2-1.5b", reduced=True, steps=20, batch=4, seq_len=64,
+                 ckpt_dir=d, ckpt_every=5, log_every=0)
+    # second run resumed (did not replay the first 10 steps)
+    assert len(out2["losses"]) == 10
+    assert out2["final_step"] == 20
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "xlstm-1.3b", "zamba2-2.7b"])
+def test_serve_loop(arch):
+    out = serve(arch, batch=2, prompt_len=16, max_new_tokens=4)
+    assert out["new_tokens"] == 4
+    assert len(out["sample"]) >= 4
+
+
+def test_onn_retrieval_service():
+    onn, xi = build_onn("7x6", "hybrid")
+    out = serve_requests(onn, xi, corruption=0.10, n_requests=64)
+    assert out["accuracy"] >= 0.9, out  # paper: ~100 % at 10 % corruption
+    assert out["mean_settle_cycles"] < 50
+
+
+def test_onn_retrieval_via_pallas_kernel():
+    """The Pallas coupling kernel must reproduce the jnp path exactly."""
+    onn_k, xi = build_onn("5x4", "hybrid", use_kernel=True)
+    onn_j, _ = build_onn("5x4", "hybrid", use_kernel=False)
+    out_k = serve_requests(onn_k, xi, corruption=0.10, n_requests=32)
+    out_j = serve_requests(onn_j, xi, corruption=0.10, n_requests=32)
+    assert out_k["accuracy"] == out_j["accuracy"], (out_k, out_j)
+    assert out_k["mean_settle_cycles"] == out_j["mean_settle_cycles"]

@@ -1,0 +1,130 @@
+"""ONN dynamics: architecture equivalence, energy properties, retrieval."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ONN, ONNConfig, async_sweep, hamiltonian
+from repro.core.energy import is_local_minimum
+from repro.core.learning import diederich_opper_i
+from repro.core.quantization import quantize_weights
+from repro.data import corrupt_batch, load_dataset
+
+
+def _trained_onn(name, **cfg_kwargs):
+    xi = load_dataset(name)
+    q = quantize_weights(diederich_opper_i(xi).weights)
+    n = xi.shape[1]
+    cfg = ONNConfig(n=n, **cfg_kwargs)
+    return ONN(cfg, q.values), xi, q.values
+
+
+def test_functional_equals_rtl_recurrent():
+    """Per-clock snap updates are idempotent within a half-period ⇒ the
+    clock-accurate recurrent run matches the functional run exactly."""
+    onn_f, xi, _ = _trained_onn("5x4", architecture="recurrent", mode="functional")
+    onn_r, _, _ = _trained_onn("5x4", architecture="recurrent", mode="rtl")
+    corrupted = corrupt_batch(xi[1], jax.random.PRNGKey(3), 0.25, 24)
+    out_f = onn_f.retrieve(corrupted)
+    out_r = onn_r.retrieve(corrupted)
+    np.testing.assert_array_equal(
+        np.asarray(out_f.final_sigma), np.asarray(out_r.final_sigma)
+    )
+
+
+def test_hybrid_matches_recurrent_dynamics():
+    """Paper Table 6: hybrid and recurrent retrieve the same patterns."""
+    onn_h, xi, _ = _trained_onn("7x6", architecture="hybrid", mode="rtl")
+    onn_r, _, _ = _trained_onn("7x6", architecture="recurrent", mode="rtl")
+    for noise in (0.10, 0.25):
+        corrupted = corrupt_batch(xi[0], jax.random.PRNGKey(11), noise, 32)
+        acc_h = jnp.mean(
+            jnp.all(onn_h.retrieve(corrupted).final_sigma == xi[0], axis=-1)
+        )
+        acc_r = jnp.mean(
+            jnp.all(onn_r.retrieve(corrupted).final_sigma == xi[0], axis=-1)
+        )
+        assert abs(float(acc_h) - float(acc_r)) < 0.15
+
+
+def test_trained_patterns_are_stable_states():
+    onn, xi, w = _trained_onn("5x4", mode="functional")
+    out = onn.retrieve(xi)  # start exactly at the patterns
+    np.testing.assert_array_equal(np.asarray(out.final_sigma), np.asarray(xi))
+    assert bool(jnp.all(out.settle_cycle == 0))
+
+
+def test_retrieval_reaches_local_minimum():
+    onn, xi, w = _trained_onn("5x4", mode="functional")
+    corrupted = corrupt_batch(xi[0], jax.random.PRNGKey(0), 0.10, 16)
+    out = onn.retrieve(corrupted)
+    w_sym = ((w.astype(jnp.int32) + w.astype(jnp.int32).T) // 2).astype(jnp.int32)
+    # settled states are fixed points of the sign dynamics
+    for s, ok in zip(np.asarray(out.final_sigma), np.asarray(out.settled)):
+        if ok:
+            field = np.asarray(w, np.int32) @ s.astype(np.int32)
+            assert np.all(s * field >= 0)
+
+
+def test_serial_chunk_and_kernel_paths_match_default():
+    onn_a, xi, w = _trained_onn("5x4", mode="functional")
+    cfg_b = ONNConfig(n=xi.shape[1], mode="functional", serial_chunk=4)
+    cfg_c = ONNConfig(n=xi.shape[1], mode="functional", use_kernel=True)
+    onn_b, onn_c = ONN(cfg_b, w), ONN(cfg_c, w)
+    corrupted = corrupt_batch(xi[2], jax.random.PRNGKey(5), 0.25, 8)
+    ref = np.asarray(onn_a.retrieve(corrupted).final_sigma)
+    np.testing.assert_array_equal(ref, np.asarray(onn_b.retrieve(corrupted).final_sigma))
+    np.testing.assert_array_equal(ref, np.asarray(onn_c.retrieve(corrupted).final_sigma))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([8, 16, 24]))
+def test_property_async_updates_never_increase_energy(seed, n):
+    """For symmetric zero-diagonal couplings, asynchronous single-spin sign
+    updates are energy-non-increasing (Hopfield's theorem)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-15, 16, (n, n))
+    w = jnp.asarray(np.triu(a, 1) + np.triu(a, 1).T, jnp.int8)
+    sigma = jnp.asarray(rng.choice([-1, 1], (n,)), jnp.int8)
+    order = jnp.asarray(rng.permutation(n))
+    e0 = float(hamiltonian(w, sigma))
+    for _ in range(3):
+        sigma = async_sweep(w, sigma, order)
+        e1 = float(hamiltonian(w, sigma))
+        assert e1 <= e0 + 1e-5
+        e0 = e1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_async_fixed_point_is_local_minimum(seed):
+    rng = np.random.default_rng(seed)
+    n = 12
+    a = rng.integers(-15, 16, (n, n))
+    w = jnp.asarray(np.triu(a, 1) + np.triu(a, 1).T, jnp.int8)
+    sigma = jnp.asarray(rng.choice([-1, 1], (n,)), jnp.int8)
+    order = jnp.arange(n)
+    for _ in range(n):  # enough sweeps to converge at this size
+        sigma = async_sweep(w, sigma, order)
+    assert bool(is_local_minimum(w, sigma))
+
+
+def test_synchronous_dynamics_period_two_detection():
+    """Synchronous Hopfield can 2-cycle; the run must flag it, not hang."""
+    w = jnp.asarray([[0, -15], [-15, 0]], jnp.int8) * -1  # ferromagnetic pair
+    w = jnp.asarray([[0, 15], [15, 0]], jnp.int8) * -1  # antiferro: frustration-free 2-cycle driver
+    cfg = ONNConfig(n=2, mode="functional", max_cycles=10)
+    onn = ONN(cfg, w)
+    # aligned spins under antiferro coupling flip together forever
+    phase0 = onn.initial_phase(jnp.asarray([1, 1], jnp.int8))
+    out = onn.run(phase0)
+    assert bool(out.cycled) and not bool(out.settled)
+
+
+def test_max_cycles_bound_and_settle_units():
+    onn, xi, _ = _trained_onn("3x3", mode="functional", max_cycles=7)
+    out = onn.retrieve(xi)
+    assert np.all(np.asarray(out.settle_cycle) <= 7)

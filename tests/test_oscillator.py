@@ -1,0 +1,72 @@
+"""Oscillator semantics: phase-counter model ≡ circular shift register."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import oscillator as osc
+
+
+@pytest.mark.parametrize("phase_bits", [2, 3, 4, 5])
+def test_counter_equals_shift_register(phase_bits):
+    """Paper Table 3: advancing the register == incrementing the counter."""
+    n = osc.n_positions(phase_bits)
+    reg = osc.ShiftRegisterOscillator(phase_bits=phase_bits)
+    for t in range(3 * n):
+        counter_amp = int(osc.amplitude(jnp.uint8(t % n), phase_bits))
+        assert reg.output() == counter_amp, f"t={t}"
+        reg.clock()
+
+
+@pytest.mark.parametrize("phase_bits", [2, 4])
+def test_tap_selects_phase_shift(phase_bits):
+    """Tapping register k == reading the amplitude at phase theta+k."""
+    n = osc.n_positions(phase_bits)
+    for tap in range(n):
+        reg = osc.ShiftRegisterOscillator(phase_bits=phase_bits, tap=tap)
+        for theta in range(n):
+            reg.set_phase(theta)
+            expect = int(osc.amplitude(jnp.uint8((theta + tap) % n), phase_bits))
+            assert reg.output() == expect
+
+
+def test_period_and_step_size():
+    assert osc.n_positions(4) == 16
+    assert osc.phase_step_degrees(4) == 22.5
+    assert osc.oscillator_period(1e-8, 4) == pytest.approx(16e-8)
+
+
+def test_amplitude_square_wave():
+    thetas = jnp.arange(16, dtype=jnp.uint8)
+    amps = osc.amplitude(thetas, 4)
+    np.testing.assert_array_equal(np.asarray(amps), [1] * 8 + [0] * 8)
+
+
+def test_spin_encoding():
+    thetas = jnp.arange(16, dtype=jnp.uint8)
+    spins = osc.spin(thetas, 4)
+    np.testing.assert_array_equal(np.asarray(spins), [1] * 8 + [-1] * 8)
+
+
+def test_phase_align_all_cases():
+    """Enumerate all 16 phases × {S>0, S<0, S=0} (paper §2.3 reference rule)."""
+    for theta in range(16):
+        th = jnp.uint8(theta)
+        assert int(osc.phase_align(th, jnp.int32(5))) == 0
+        assert int(osc.phase_align(th, jnp.int32(-3))) == 8
+        assert int(osc.phase_align(th, jnp.int32(0))) == theta
+
+
+def test_reference_signal():
+    amp = jnp.int8(1)
+    assert int(osc.reference_signal(jnp.int32(2), amp)) == 1
+    assert int(osc.reference_signal(jnp.int32(-2), amp)) == 0
+    assert int(osc.reference_signal(jnp.int32(0), amp)) == 1
+    assert int(osc.reference_signal(jnp.int32(0), jnp.int8(0))) == 0
+
+
+def test_free_run_wraps():
+    th = jnp.uint8(15)
+    assert int(osc.free_run(th, 1, 4)) == 0
+    assert int(osc.free_run(th, 17, 4)) == 0
+    assert int(osc.free_run(jnp.uint8(3), 16, 4)) == 3

