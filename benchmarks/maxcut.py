@@ -14,11 +14,13 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core.ising import cut_value_exact, random_graph, solve_maxcut
+from repro.api import MaxCutSolver
+from repro.core.ising import random_graph
 
 
 def main(sizes=(32, 64, 128), sweeps: int = 48, instances: int = 3) -> List[Dict]:
     rows = []
+    solver = MaxCutSolver(sweeps=sweeps)
     print("# maxcut: annealed async ONN sweeps on G(n, 0.5)")
     print("n,instance,edges,cut,random_baseline,ratio_vs_half_edges")
     for n in sizes:
@@ -26,7 +28,7 @@ def main(sizes=(32, 64, 128), sweeps: int = 48, instances: int = 3) -> List[Dict
             key = jax.random.PRNGKey(1000 * n + i)
             adj = random_graph(key, n, 0.5)
             edges = float(jnp.sum(jnp.triu(adj, 1)))
-            res = solve_maxcut(adj, jax.random.fold_in(key, 7), sweeps=sweeps)
+            res = solver.solve(adj, jax.random.fold_in(key, 7))
             cut = float(res.cut_value)
             rows.append({"n": n, "instance": i, "edges": edges, "cut": cut})
             print(f"{n},{i},{int(edges)},{int(cut)},{edges/2:.0f},{cut/(edges/2):.3f}")

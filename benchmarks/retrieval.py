@@ -20,9 +20,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core.learning import diederich_opper_i
-from repro.core.onn import ONN, ONNConfig
-from repro.core.quantization import quantize_weights
+from repro.api import RetrievalSolver
 from repro.data import patterns as pat
 
 # Paper Table 6 reference values (RA%, HA%) for validation bands.
@@ -61,20 +59,17 @@ def run_dataset(
 ) -> List[Dict]:
     xi = pat.load_dataset(dataset)
     p, n = xi.shape
-    do = diederich_opper_i(xi)
-    qw = quantize_weights(do.weights)
-    cfg = ONNConfig(
-        n=n, architecture=architecture, mode=mode,
+    solver = RetrievalSolver.from_patterns(
+        xi, architecture=architecture, mode=mode,
         max_cycles=max_cycles, sync_jitter=sync_jitter,
     )
-    onn = ONN(cfg, qw.values)
     rows = []
     for frac in CORRUPTIONS:
         accs, settles, timeouts = [], [], 0
         for pi in range(p):
             key = jax.random.PRNGKey(hash((dataset, pi, int(frac * 100), seed)) % 2**31)
             corrupted = pat.corrupt_batch(xi[pi], key, frac, trials)
-            res = onn.retrieve(corrupted, jax.random.split(key, trials))
+            res = solver.solve(corrupted, jax.random.fold_in(key, 1))
             out = res.final_sigma.astype(jnp.int32)
             tgt = xi[pi].astype(jnp.int32)
             ok = jnp.all(out == tgt, axis=1) | jnp.all(out == -tgt, axis=1)

@@ -12,7 +12,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core.ising import cut_value_exact, random_graph, solve_maxcut
+from repro.api import MaxCutSolver
+from repro.core.ising import random_graph
 
 
 def main():
@@ -26,7 +27,8 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     adj = random_graph(key, args.n, args.p)
     edges = float(jnp.sum(jnp.triu(adj, 1)))
-    res = solve_maxcut(adj, jax.random.fold_in(key, 1), sweeps=args.sweeps)
+    # MaxCutSolver implements the same Solver protocol as RetrievalSolver.
+    res = MaxCutSolver(sweeps=args.sweeps).solve(adj, jax.random.fold_in(key, 1))
 
     print(f"G({args.n}, {args.p}): |E| = {int(edges)}")
     print(f"cut found:       {int(res.cut_value)}")

@@ -13,13 +13,15 @@ version of "a few hundred steps end-to-end".
 
 import argparse
 
-from repro.launch.retrieve import build_onn, serve_requests
+from repro.launch.retrieve import build_solver, serve_requests
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=512)
     ap.add_argument("--corruption", type=float, default=0.25)
+    ap.add_argument("--backend", default="parallel",
+                    choices=["parallel", "serial", "pallas"])
     args = ap.parse_args()
 
     print("dataset,arch,requests,accuracy,settle_cycles,req_per_s")
@@ -27,8 +29,8 @@ def main():
         n = {"3x3": 9, "5x4": 20, "7x6": 42, "10x10": 100, "22x22": 484}[dataset]
         archs = ["recurrent", "hybrid"] if n <= 48 else ["hybrid"]
         for arch in archs:
-            onn, xi = build_onn(dataset, arch)
-            out = serve_requests(onn, xi, args.corruption, args.requests)
+            solver, xi = build_solver(dataset, arch, backend=args.backend)
+            out = serve_requests(solver, xi, args.corruption, args.requests)
             print(
                 f"{dataset},{arch},{out['requests']},{out['accuracy']:.3f},"
                 f"{out['mean_settle_cycles']},{out['requests_per_s']}"

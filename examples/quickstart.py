@@ -2,19 +2,24 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's Figure-1 loop end to end in ~a minute on CPU:
+Walks the paper's Figure-1 loop end to end in ~a minute on CPU using the
+functional pytree API (``repro.api``):
   1. load the 10×10 letter dataset (five patterns),
   2. train coupling weights with the Diederich–Opper I rule,
-  3. quantize to the paper's 5-bit signed format,
+  3. quantize to the paper's 5-bit signed format and build ``OnnParams``,
   4. corrupt a pattern by 25 % and let the hybrid-architecture ONN settle,
   5. print the retrieved pattern next to the target.
+
+Only the config is static: re-training and rebuilding params (same N) reuses
+the compiled executable — the demo re-runs with freshly Hebbian-trained
+weights without a second compile.
 """
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.learning import diederich_opper_i
-from repro.core.onn import ONN, ONNConfig
 from repro.core.quantization import quantize_weights
 from repro.data import patterns as pat
 
@@ -36,19 +41,28 @@ def main():
     print(f"DO-I converged={bool(do.converged)} in {int(do.sweeps)} sweeps")
     qw = quantize_weights(do.weights)  # 5-bit signed, the paper's precision
 
-    cfg = ONNConfig(n=xi.shape[1], architecture="hybrid", mode="functional")
-    onn = ONN(cfg, qw.values)
+    cfg = api.ONNConfig(n=xi.shape[1], architecture="hybrid", mode="functional")
+    params = api.make_params(cfg, qw.values)
 
     key = jax.random.PRNGKey(42)
     target = xi[0]
     corrupted = pat.corrupt(target, key, 0.25)
-    result = onn.run(onn.initial_phase(corrupted))
+    result = api.run(cfg, params, api.initial_phase(cfg, corrupted))
 
     show(target, rows, cols, "\ntarget:")
     show(corrupted, rows, cols, "\ncorrupted (25%):")
     show(result.final_sigma, rows, cols, "\nretrieved:")
     ok = bool(jnp.all(result.final_sigma == target) | jnp.all(result.final_sigma == -target))
     print(f"\nretrieved correctly: {ok}, settled at cycle {int(result.settle_cycle)}")
+
+    # Weights are traced, not baked in: a different same-N coupling matrix
+    # (here: plain Hebbian instead of DO-I) reuses the compile above.
+    from repro.core.learning import hebbian
+
+    params2 = api.make_params(cfg, quantize_weights(hebbian(xi)).values)
+    result2 = api.run(cfg, params2, api.initial_phase(cfg, corrupted))
+    ok2 = bool(jnp.all(result2.final_sigma == target) | jnp.all(result2.final_sigma == -target))
+    print(f"hebbian weights, same executable: retrieved={ok2}")
 
 
 if __name__ == "__main__":

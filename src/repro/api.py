@@ -1,0 +1,125 @@
+"""Public facade for the ONN reproduction: one import surface, one protocol.
+
+Everything a caller needs rides on three ideas:
+
+* **Config is static, numbers are traced.**  ``ONNConfig`` selects sizes,
+  mode and weighted-sum backend; ``OnnParams`` (weights, bias) and
+  ``OnnState`` are pytrees, so ``run``/``retrieve`` compile once per
+  (config, shape) and compose with ``jax.vmap`` over params (many problem
+  instances, one executable), sharding, and donation.
+
+* **One backend table.**  ``ONNConfig.backend`` ∈ {"parallel", "serial",
+  "pallas"} picks the weighted-sum schedule for *both* functional and rtl
+  modes; all three are bit-exact.
+
+* **One solver surface.**  A ``Solver`` maps a problem instance to a result
+  under an explicit PRNG key.  ``RetrievalSolver`` (batched associative
+  memory — the paper's benchmark task) and ``MaxCutSolver`` (oscillatory
+  Ising machine — the paper's §2.2 motivation) both implement it, so serving
+  loops and benchmarks can hold "a solver" without caring which workload it
+  runs.
+
+Quickstart::
+
+    from repro import api
+
+    cfg = api.ONNConfig(n=100, architecture="hybrid", backend="parallel")
+    params = api.make_params(cfg, quantized_weights)
+    out = api.retrieve(cfg, params, corrupted_batch, keys=jax.random.PRNGKey(0))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+
+from repro.core import ising as _ising
+from repro.core.dynamics import (  # noqa: F401 — re-exported API
+    BACKENDS,
+    ONNConfig,
+    ONNResult,
+    OnnParams,
+    OnnState,
+    async_sweep,
+    functional_update,
+    init_state,
+    initial_phase,
+    make_params,
+    retrieve,
+    run,
+    sign_update,
+    step,
+    validate_weights,
+    weighted_sum,
+)
+from repro.core.ising import MaxCutResult  # noqa: F401
+from repro.core.learning import diederich_opper_i
+from repro.core.quantization import quantize_weights
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """A problem-instance → result map under an explicit PRNG key.
+
+    ``instance`` is workload-specific: a batch of corrupted spin patterns for
+    retrieval, an adjacency matrix for max-cut.  Implementations must be pure
+    given (instance, key) — no hidden default keys.
+    """
+
+    def solve(self, instance: jax.Array, key: Optional[jax.Array] = None) -> Any:
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalSolver:
+    """Batched pattern retrieval on a fixed trained ONN (paper Fig. 7).
+
+    ``solve`` takes a (B, N) ±1 batch of (corrupted) patterns and an optional
+    key — required only when the config draws randomness (rtl sync_jitter); a
+    single key is split into one subkey per request.
+    """
+
+    config: ONNConfig
+    params: OnnParams
+
+    @classmethod
+    def from_patterns(
+        cls,
+        xi: jax.Array,
+        *,
+        weight_bits: int = 5,
+        **cfg_kwargs: Any,
+    ) -> "RetrievalSolver":
+        """Train DO-I couplings on patterns ``xi`` (P, N) and quantize."""
+        do = diederich_opper_i(xi)
+        qw = quantize_weights(do.weights, bits=weight_bits)
+        cfg = ONNConfig(n=xi.shape[1], weight_bits=weight_bits, **cfg_kwargs)
+        return cls(config=cfg, params=make_params(cfg, qw.values))
+
+    def solve(
+        self, instance: jax.Array, key: Optional[jax.Array] = None
+    ) -> ONNResult:
+        return retrieve(self.config, self.params, instance, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxCutSolver:
+    """Annealed asynchronous ONN sweeps on a max-cut embedding (paper §2.2).
+
+    ``solve`` takes an (N, N) adjacency matrix; the key drives the initial
+    spin draw and the per-sweep visit orders and is required.
+    """
+
+    sweeps: int = 64
+    weight_bits: int = 5
+
+    def solve(
+        self, instance: jax.Array, key: Optional[jax.Array] = None
+    ) -> MaxCutResult:
+        if key is None:
+            raise ValueError("MaxCutSolver.solve requires a PRNG key")
+        return _ising.solve_maxcut(
+            instance, key, sweeps=self.sweeps, weight_bits=self.weight_bits
+        )

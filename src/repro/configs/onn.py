@@ -23,9 +23,14 @@ ONN_RECURRENT_48 = ONNConfig(n=48, architecture="recurrent", mode="functional")
 ONN_HYBRID_506 = ONNConfig(n=506, architecture="hybrid", mode="functional")
 
 # Beyond-paper distributed scale-up: batched retrieval sweeps at large N.
+# backend="pallas" routes the coupling sum through the blocked TPU kernel
+# (repro.kernels); weights stay a traced OnnParams leaf, so every problem
+# instance at this N shares one compiled executable.
 ONN_LARGE_N = 131072
 ONN_LARGE_BATCH = 1024
-ONN_LARGE = ONNConfig(n=ONN_LARGE_N, architecture="hybrid", mode="functional")
+ONN_LARGE = ONNConfig(
+    n=ONN_LARGE_N, architecture="hybrid", mode="functional", backend="pallas"
+)
 
 # Paper-scale batched cell (fits one chip; baseline for the sharded variant).
 ONN_PAPER_BATCH = 1024

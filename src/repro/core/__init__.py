@@ -1,7 +1,29 @@
 # The paper's primary contribution: digital ONN architectures (recurrent vs
 # hybrid serialized coupling), learning rules, quantization, energy model,
 # Ising-machine embedding, and the FPGA hardware-scaling cost model.
-from repro.core.onn import ONN, ONNConfig, ONNResult, async_sweep  # noqa: F401
+#
+# The simulation core is the functional pytree API in repro.core.dynamics
+# (OnnParams/OnnState + init_state/step/run/retrieve); the ONN class is a
+# deprecated shim kept for old imports.
+from repro.core.dynamics import (  # noqa: F401
+    BACKENDS,
+    ONNConfig,
+    ONNResult,
+    OnnParams,
+    OnnState,
+    async_sweep,
+    functional_update,
+    init_state,
+    initial_phase,
+    make_params,
+    retrieve,
+    run,
+    sign_update,
+    step,
+    validate_weights,
+    weighted_sum,
+)
+from repro.core.onn import ONN  # noqa: F401  (deprecated wrapper)
 from repro.core.quantization import (  # noqa: F401
     QuantizedWeights,
     quantize_weights,

@@ -48,15 +48,22 @@ def weighted_sum_serial(w: jax.Array, sigma: jax.Array, chunk: int = 1) -> jax.A
     Accumulates over inputs ``chunk`` at a time with a ``lax.scan`` — the
     executable model of the fast-clock counter + single MAC (``chunk=1``) or
     of the blocked VMEM streaming schedule of the TPU kernel (``chunk>1``).
-    Bit-exact to :func:`weighted_sum_parallel` by integer associativity.
+    Bit-exact to :func:`weighted_sum_parallel` by integer associativity; when
+    ``chunk`` does not divide N the contraction dimension is zero-padded (the
+    hardware analogue: the MAC idles on the tail fast-clock edges), which
+    leaves the integer sum unchanged.
     """
     _check(w, sigma)
-    n = w.shape[1]
-    if n % chunk != 0:
-        raise ValueError(f"chunk {chunk} must divide N={n}")
-    steps = n // chunk
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    n_rows, n = w.shape
+    pad = (-n) % chunk
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        sigma = jnp.pad(sigma, [(0, 0)] * (sigma.ndim - 1) + [(0, pad)])
+    steps = (n + pad) // chunk
     # (steps, N, chunk) weight blocks; (steps, ..., chunk) spin blocks.
-    w_blocks = w.astype(jnp.int32).reshape(n, steps, chunk).transpose(1, 0, 2)
+    w_blocks = w.astype(jnp.int32).reshape(n_rows, steps, chunk).transpose(1, 0, 2)
     s_blocks = jnp.moveaxis(
         sigma.astype(jnp.int32).reshape(*sigma.shape[:-1], steps, chunk), -2, 0
     )
@@ -66,7 +73,7 @@ def weighted_sum_serial(w: jax.Array, sigma: jax.Array, chunk: int = 1) -> jax.A
         acc = acc + jnp.einsum("ic,...c->...i", wb, sb, preferred_element_type=jnp.int32)
         return acc, None
 
-    init = jnp.zeros((*sigma.shape[:-1], n), dtype=jnp.int32)
+    init = jnp.zeros((*sigma.shape[:-1], n_rows), dtype=jnp.int32)
     acc, _ = jax.lax.scan(body, init, (w_blocks, s_blocks))
     return acc
 

@@ -1,0 +1,489 @@
+"""Pure functional ONN dynamics over registered pytrees.
+
+This is the core API of the repo.  All entry points are pure functions of
+
+* ``ONNConfig``  — the only *static* argument: sizes, bit widths, mode,
+  backend.  Hashable frozen dataclass; jit specializes on it.
+* ``OnnParams``  — the coupling matrix and bias as a *traced* pytree.  Two
+  different weight matrices of the same N share one compiled executable,
+  and params compose with ``jax.vmap`` (many problems, one compile),
+  ``jax.device_put`` sharding, and donation.
+* ``OnnState``   — the per-run dynamical state (phases + settle bookkeeping),
+  also a traced pytree, so ``step`` can be scanned, checkpointed, or driven
+  one cycle at a time from a server loop.
+
+Simulation fidelities (``ONNConfig.mode``):
+
+* ``functional`` — one synchronous phase update per oscillation cycle.  Both
+  FPGA architectures compute the identical integer weighted sum, so in this
+  mode they are the same map: σ(t+1) = sign-align(W σ(t)).
+* ``rtl`` — clock-accurate: the phase is updated every slow-clock edge
+  (2**phase_bits per oscillation cycle), amplitudes are evaluated in the lab
+  frame, and the *hybrid* architecture consumes amplitudes sampled one slow
+  clock earlier (paper Fig. 6).  ``sync_jitter`` randomizes the enable-signal
+  offset within the period, as on the real board.
+
+Weighted-sum backends (``ONNConfig.backend``), one dispatch table shared by
+both modes:
+
+* ``parallel`` — fully parallel einsum (the recurrent adder tree, Fig. 4).
+* ``serial``   — chunked ``lax.scan`` accumulation (the hybrid serialized
+  MAC, Fig. 5; ``serial_chunk`` sets the block size, any N).
+* ``pallas``   — the blocked TPU kernel (``repro.kernels``), interpret mode
+  on CPU.
+
+All three are bit-exact (integer associativity); spins are ±1 ``int8``,
+weights ``weight_bits``-bit signed carried in ``int8``, sums exact ``int32``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coupling as coupling_lib
+from repro.core import oscillator as osc
+from repro.core.quantization import check_weight_range
+
+_BACKEND_NAMES = ("parallel", "serial", "pallas")
+
+#: Traces per public entry point, incremented at trace (not call) time.
+#: Tests assert "two same-shape weight matrices, one compile" against this.
+TRACE_COUNTER: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class ONNConfig:
+    """Static configuration of one digital ONN instance.
+
+    This is the only static argument of the functional API: everything
+    numeric (weights, bias, phases) is traced.  ``backend`` selects the
+    weighted-sum schedule; the deprecated ``use_kernel`` flag and a bare
+    ``serial_chunk > 0`` are folded into it for backward compatibility.
+    """
+
+    n: int
+    weight_bits: int = 5
+    phase_bits: int = 4
+    architecture: str = "hybrid"  # "recurrent" | "hybrid"
+    mode: str = "functional"  # "functional" | "rtl"
+    max_cycles: int = 100
+    sync_jitter: bool = False  # randomize enable-signal offset (rtl hybrid)
+    backend: str = "parallel"  # "parallel" | "serial" | "pallas"
+    serial_chunk: int = 0  # block size for backend="serial" (0 → auto)
+    use_kernel: bool = False  # deprecated: alias for backend="pallas"
+
+    def __post_init__(self) -> None:
+        if self.architecture not in ("recurrent", "hybrid"):
+            raise ValueError(f"unknown architecture {self.architecture!r}")
+        if self.mode not in ("functional", "rtl"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        # Legacy route flags map onto the backend field (they predate it and
+        # only ever selected one of these schedules).  The config is then
+        # normalized — backend is the canonical cache key, so an old-style
+        # and a new-style spelling of the same schedule hash equal and share
+        # one jit executable.  Contradictory combinations raise rather than
+        # silently dropping a flag.
+        if self.use_kernel:
+            if self.backend not in ("parallel", "pallas"):
+                raise ValueError(
+                    f"use_kernel=True (deprecated) conflicts with explicit "
+                    f"backend={self.backend!r}; drop use_kernel"
+                )
+            if self.serial_chunk > 0:
+                raise ValueError(
+                    "use_kernel=True conflicts with serial_chunk>0; pick one "
+                    "backend explicitly"
+                )
+            object.__setattr__(self, "backend", "pallas")
+            object.__setattr__(self, "use_kernel", False)
+        elif self.backend == "parallel" and self.serial_chunk > 0:
+            object.__setattr__(self, "backend", "serial")
+        if self.backend not in _BACKEND_NAMES:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {_BACKEND_NAMES}"
+            )
+
+    @property
+    def clocks_per_cycle(self) -> int:
+        return 1 << self.phase_bits
+
+
+class OnnParams(NamedTuple):
+    """Learned/embedded problem parameters — a traced pytree leaf pair."""
+
+    weights: jax.Array  # (N, N) int8 coupling matrix
+    bias: jax.Array  # (N,) int32 per-oscillator field offset
+
+
+class OnnState(NamedTuple):
+    """Dynamical state of one run — a traced pytree, scanned by ``run``."""
+
+    phase: jax.Array  # (N,) uint8 rotating-frame phase counters
+    prev_phase: jax.Array  # (N,) phases one cycle earlier (period-2 check)
+    first_cycle: jax.Array  # bool: prev_phase not yet populated
+    settle_cycle: jax.Array  # int32 first cycle with no phase change
+    settled: jax.Array  # bool
+    cycled: jax.Array  # bool: entered a period-2 orbit
+    cycle: jax.Array  # int32 cycles elapsed
+
+
+class ONNResult(NamedTuple):
+    """Outcome of one ONN run.
+
+    ``settle_cycle``: first oscillation cycle at which the phase state stopped
+    changing (units of paper Table 7); only meaningful where ``settled``.
+    ``cycled``: the synchronous dynamics entered a period-2 orbit (a Hopfield
+    limit cycle — reported as a time-out, as the paper excludes them).
+    """
+
+    final_phase: jax.Array
+    final_sigma: jax.Array
+    settle_cycle: jax.Array
+    settled: jax.Array
+    cycled: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def make_params(
+    cfg: ONNConfig, weights: jax.Array, bias: Optional[jax.Array] = None
+) -> OnnParams:
+    """Validate and canonicalize a coupling matrix + bias into ``OnnParams``."""
+    weights = jnp.asarray(weights)
+    if weights.shape != (cfg.n, cfg.n):
+        raise ValueError(f"weights {weights.shape} != ({cfg.n}, {cfg.n})")
+    if weights.dtype != jnp.int8:
+        raise TypeError(f"weights must be int8, got {weights.dtype}")
+    if bias is None:
+        bias = jnp.zeros((cfg.n,), jnp.int32)
+    else:
+        bias = jnp.asarray(bias, jnp.int32)
+        if bias.shape != (cfg.n,):
+            raise ValueError(f"bias {bias.shape} != ({cfg.n},)")
+    return OnnParams(weights=weights, bias=bias)
+
+
+def validate_weights(weights: jax.Array, bits: int) -> None:
+    """Raise if the coupling matrix is out of the representable range."""
+    ok = bool(check_weight_range(weights, bits))
+    if not ok:
+        raise ValueError(f"coupling weights exceed {bits}-bit signed range")
+
+
+# ---------------------------------------------------------------------------
+# Weighted-sum backend dispatch (shared by functional and rtl modes)
+# ---------------------------------------------------------------------------
+
+
+def _parallel_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
+    return coupling_lib.weighted_sum_parallel(w, sigma)
+
+
+def _serial_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
+    chunk = cfg.serial_chunk if cfg.serial_chunk > 0 else min(cfg.n, 64)
+    return coupling_lib.weighted_sum_serial(w, sigma, chunk=chunk)
+
+
+def _pallas_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
+    from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
+
+    return kernel_ops.coupling_sum(w, sigma)
+
+
+BACKENDS = {
+    "parallel": _parallel_sum,
+    "serial": _serial_sum,
+    "pallas": _pallas_sum,
+}
+
+
+def weighted_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
+    """S = W σ through the backend selected by ``cfg.backend``."""
+    return BACKENDS[cfg.backend](cfg, w, sigma)
+
+
+def sign_update(field: jax.Array, sigma: jax.Array) -> jax.Array:
+    """Hopfield sign dynamics with ties keeping the current spin."""
+    return jnp.where(field > 0, 1, jnp.where(field < 0, -1, sigma)).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Functional-mode dynamics
+# ---------------------------------------------------------------------------
+
+
+def initial_phase(cfg: ONNConfig, sigma0: jax.Array) -> jax.Array:
+    """Canonical phases (0 / half-period) for an initial spin pattern."""
+    return osc.phase_of_spin(sigma0, cfg.phase_bits)
+
+
+def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> jax.Array:
+    """One synchronous phase update (rotating frame)."""
+    sigma = osc.spin(phase, cfg.phase_bits)
+    s = weighted_sum(cfg, params.weights, sigma) + params.bias
+    return osc.phase_align(phase, s, cfg.phase_bits)
+
+
+def _state_of_phase(cfg: ONNConfig, phase0: jax.Array) -> OnnState:
+    return OnnState(
+        phase=phase0,
+        # prev_phase starts as a copy of phase0; first_cycle guards it, so no
+        # sentinel value is needed (a 255 sentinel collides with a legal phase
+        # at phase_bits == 8).
+        prev_phase=phase0,
+        first_cycle=jnp.bool_(True),
+        settle_cycle=jnp.int32(cfg.max_cycles),
+        settled=jnp.bool_(False),
+        cycled=jnp.bool_(False),
+        cycle=jnp.int32(0),
+    )
+
+
+def init_state(cfg: ONNConfig, sigma0: jax.Array) -> OnnState:
+    """Fresh dynamical state for an initial spin pattern."""
+    return _state_of_phase(cfg, initial_phase(cfg, sigma0))
+
+
+def step(cfg: ONNConfig, params: OnnParams, state: OnnState) -> OnnState:
+    """One oscillation cycle of the synchronous (functional-mode) dynamics."""
+    if cfg.mode != "functional":
+        raise ValueError(
+            "step() drives the synchronous functional-mode dynamics; "
+            f"mode={cfg.mode!r} runs are only available through run()"
+        )
+    new_phase = functional_update(cfg, params, state.phase)
+    unchanged = jnp.all(new_phase == state.phase)
+    is_cycle2 = (
+        jnp.all(new_phase == state.prev_phase) & ~unchanged & ~state.first_cycle
+    )
+    settle = jnp.where(unchanged & ~state.settled, state.cycle, state.settle_cycle)
+    settled = state.settled | unchanged
+    cycled = state.cycled | (is_cycle2 & ~settled)
+    return OnnState(
+        phase=new_phase,
+        prev_phase=state.phase,
+        first_cycle=jnp.bool_(False),
+        settle_cycle=settle,
+        settled=settled,
+        cycled=cycled,
+        cycle=state.cycle + 1,
+    )
+
+
+def _result_of_state(cfg: ONNConfig, state: OnnState) -> ONNResult:
+    return ONNResult(
+        final_phase=state.phase,
+        final_sigma=osc.spin(state.phase, cfg.phase_bits),
+        settle_cycle=state.settle_cycle,
+        settled=state.settled,
+        cycled=state.cycled,
+    )
+
+
+def _run_functional(cfg: ONNConfig, params: OnnParams, phase0: jax.Array) -> ONNResult:
+    def body(state, _):
+        return step(cfg, params, state), None
+
+    state, _ = jax.lax.scan(
+        body, _state_of_phase(cfg, phase0), None, length=cfg.max_cycles
+    )
+    return _result_of_state(cfg, state)
+
+
+# ---------------------------------------------------------------------------
+# RTL-mode dynamics
+# ---------------------------------------------------------------------------
+
+
+def _rtl_clock_edge(cfg: ONNConfig, params: OnnParams, carry, t):
+    """One slow-clock edge in the lab frame."""
+    phase, sigma_lab_prev = carry
+    half = cfg.clocks_per_cycle // 2
+    ref_phase = jnp.mod(t, cfg.clocks_per_cycle)
+    sign_ref = jnp.where(ref_phase < half, jnp.int32(1), jnp.int32(-1))
+    # Lab-frame spins *now*:
+    theta_lab = (phase.astype(jnp.int32) + ref_phase) % cfg.clocks_per_cycle
+    sigma_lab = osc.spin(theta_lab.astype(jnp.uint8), cfg.phase_bits)
+    # The hybrid's serialized sum consumed amplitudes from one slow clock
+    # earlier; the recurrent adder tree is combinational (current amps).
+    sigma_used = sigma_lab_prev if cfg.architecture == "hybrid" else sigma_lab
+    s = weighted_sum(cfg, params.weights, sigma_used) + params.bias
+    # Reference level is absolute (high iff S>0); aligning the oscillator
+    # to it in the lab frame == rotating-frame target sign(S)·sign_ref.
+    s_rel = s * sign_ref
+    new_phase = osc.phase_align(phase, s_rel, cfg.phase_bits)
+    return (new_phase, sigma_lab), new_phase
+
+
+def _run_rtl(
+    cfg: ONNConfig, params: OnnParams, phase0: jax.Array, key: Optional[jax.Array]
+) -> ONNResult:
+    clocks = cfg.clocks_per_cycle
+    if cfg.sync_jitter:
+        if key is None:
+            raise ValueError("sync_jitter requires a PRNG key")
+        t0 = jax.random.randint(key, (), 0, clocks, dtype=jnp.int32)
+    else:
+        t0 = jnp.int32(0)
+
+    ref0 = jnp.mod(t0, clocks)
+    theta_lab0 = (phase0.astype(jnp.int32) + ref0) % clocks
+    sigma_lab0 = osc.spin(theta_lab0.astype(jnp.uint8), cfg.phase_bits)
+
+    def cycle_body(carry, cycle_idx):
+        phase, sigma_prev, settle, settled, cycled, snapshot, first = carry
+
+        def clock_body(inner, k):
+            (ph, sp), _ = _rtl_clock_edge(
+                cfg, params, inner, t0 + cycle_idx * clocks + k
+            )
+            return (ph, sp), None
+
+        (new_phase, new_sigma_prev), _ = jax.lax.scan(
+            clock_body, (phase, sigma_prev), jnp.arange(clocks)
+        )
+        unchanged = jnp.all(new_phase == phase)
+        is_cycle2 = jnp.all(new_phase == snapshot) & ~unchanged & ~first
+        settle = jnp.where(unchanged & ~settled, cycle_idx, settle)
+        settled = settled | unchanged
+        cycled = cycled | (is_cycle2 & ~settled)
+        return (
+            new_phase,
+            new_sigma_prev,
+            settle,
+            settled,
+            cycled,
+            phase,
+            jnp.bool_(False),
+        ), None
+
+    init = (
+        phase0,
+        sigma_lab0,
+        jnp.int32(cfg.max_cycles),
+        jnp.bool_(False),
+        jnp.bool_(False),
+        # snapshot starts as phase0, guarded by the first-cycle flag (no 255
+        # sentinel — that value is a legal phase at phase_bits == 8).
+        phase0,
+        jnp.bool_(True),
+    )
+    (phase, _, settle, settled, cycled, _, _), _ = jax.lax.scan(
+        cycle_body, init, jnp.arange(cfg.max_cycles)
+    )
+    return ONNResult(
+        final_phase=phase,
+        final_sigma=osc.spin(phase, cfg.phase_bits),
+        settle_cycle=settle,
+        settled=settled,
+        cycled=cycled,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Public jitted entry points: one compile per (config, shape)
+# ---------------------------------------------------------------------------
+
+
+def _run(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0: jax.Array,
+    key: Optional[jax.Array] = None,
+) -> ONNResult:
+    TRACE_COUNTER["run"] += 1
+    if cfg.mode == "functional":
+        return _run_functional(cfg, params, phase0)
+    return _run_rtl(cfg, params, phase0, key)
+
+
+@partial(jax.jit, static_argnums=0)
+def run(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0: jax.Array,
+    key: Optional[jax.Array] = None,
+) -> ONNResult:
+    """Evolve one ONN to steady state; pure in ``params`` and ``phase0``.
+
+    ``phase0``: (N,) uint8 initial phases.  ``key`` seeds the enable-signal
+    jitter (rtl mode with ``sync_jitter``); ignored otherwise and may be None.
+
+    Only ``cfg`` is static: two different weight matrices of the same N reuse
+    one compiled executable, and ``jax.vmap(run, in_axes=(None, 0, None))``
+    batches over *problems*.
+    """
+    return _run(cfg, params, phase0, key)
+
+
+def _retrieve(
+    cfg: ONNConfig,
+    params: OnnParams,
+    sigma0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+) -> ONNResult:
+    TRACE_COUNTER["retrieve"] += 1
+    phase0 = jax.vmap(lambda s: initial_phase(cfg, s))(sigma0_batch)
+    if keys is None:
+        return jax.vmap(lambda p: _run(cfg, params, p, None))(phase0)
+    # A single key is split into one subkey per request.  New-style typed
+    # keys are scalars (a batch has ndim 1); legacy uint32 keys have shape
+    # (2,) (a batch has ndim 2).
+    typed = jnp.issubdtype(keys.dtype, jax.dtypes.prng_key)
+    if keys.ndim == (0 if typed else 1):
+        keys = jax.random.split(keys, sigma0_batch.shape[0])
+    return jax.vmap(lambda p, k: _run(cfg, params, p, k))(phase0, keys)
+
+
+@partial(jax.jit, static_argnums=0)
+def retrieve(
+    cfg: ONNConfig,
+    params: OnnParams,
+    sigma0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+) -> ONNResult:
+    """Run a batch of initial spin patterns to steady state (vmapped).
+
+    PRNG use is explicit: pass ``keys`` of shape (B, 2) — one key per request
+    — or a single key (shape (2,)), which is split into one subkey per
+    request.  There is no implicit default key: configurations that consume
+    randomness (``mode="rtl"`` with ``sync_jitter``) raise if ``keys`` is
+    None instead of silently correlating every run in the batch.
+    """
+    if keys is None and cfg.mode == "rtl" and cfg.sync_jitter:
+        raise ValueError(
+            "retrieve: this config draws randomness (rtl sync_jitter); pass "
+            "keys= (a (B, 2) batch of keys, or one key to split per request)"
+        )
+    return _retrieve(cfg, params, sigma0_batch, keys)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous sweeps (Ising solver + energy-monotonicity properties)
+# ---------------------------------------------------------------------------
+
+
+def async_sweep(w: jax.Array, sigma: jax.Array, order: jax.Array) -> jax.Array:
+    """One asynchronous (sequential) Hopfield sweep: σ_i ← sign(Σ W_ij σ_j).
+
+    Used by the Ising solver and by the energy-monotonicity property tests
+    (asynchronous updates on symmetric zero-diagonal couplings never increase
+    the Hamiltonian).  Ties keep the current spin.
+    """
+
+    def body(s, i):
+        field = w[i].astype(jnp.int32) @ s.astype(jnp.int32)
+        new_si = jnp.where(field > 0, 1, jnp.where(field < 0, -1, s[i])).astype(s.dtype)
+        return s.at[i].set(new_si), None
+
+    sigma, _ = jax.lax.scan(body, sigma, order)
+    return sigma

@@ -6,6 +6,10 @@ setting J = −A makes the Ising ground state the maximum cut, and the ONN's
 phase dynamics search for it.  Synchronous sign dynamics can 2-cycle, so the
 solver interleaves synchronous ONN updates with asynchronous sweeps
 (hardware analogue: per-oscillator enable staggering).
+
+``solve_maxcut`` is exposed through the unified ``repro.api.Solver`` surface
+as ``repro.api.MaxCutSolver`` (the same protocol batched pattern retrieval
+implements via ``RetrievalSolver``).
 """
 
 from __future__ import annotations
@@ -15,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.onn import async_sweep
+from repro.core.dynamics import async_sweep
 from repro.core.quantization import quantize_weights
 
 

@@ -1,93 +1,48 @@
-"""Digital ONN dynamics: recurrent and hybrid architectures, both modes.
+"""Deprecated object-oriented wrapper around :mod:`repro.core.dynamics`.
 
-Two simulation fidelities:
+The ONN simulation lives in ``repro.core.dynamics`` as pure functions over
+registered pytrees (``OnnParams`` / ``OnnState``), jitted once per
+(config, shape) with only ``ONNConfig`` static.  Import from there — or from
+the ``repro.api`` facade — in new code::
 
-* ``functional`` — one synchronous phase update per oscillation cycle.  Both
-  FPGA architectures compute the identical integer weighted sum, so in this
-  mode they are the same map: σ(t+1) = sign-align(W σ(t)).  This is the fast
-  path used for large benchmark sweeps.
+    from repro.api import ONNConfig, make_params, run, retrieve
 
-* ``rtl`` — clock-accurate: the phase is updated every slow-clock edge
-  (2**phase_bits per oscillation cycle), amplitudes are evaluated in the lab
-  frame against the global reference oscillator, and the *hybrid* architecture
-  consumes amplitudes sampled one slow clock earlier (its serialized MAC
-  starts at the previous rising edge, paper Fig. 6).  The one-clock staleness
-  makes updates that land on a half-period boundary read inverted amplitudes —
-  the mechanism behind the paper's observed run-to-run variance and the small
-  dynamical deviation at 3×3 / 50 % noise (§5.3).  ``sync_jitter`` randomizes
-  the enable-signal offset within the period, as on the real board.
+    cfg = ONNConfig(n=100, backend="parallel")
+    params = make_params(cfg, weights)
+    out = run(cfg, params, initial_phase(cfg, sigma0))
 
-Spins are ±1 ``int8``; weights are ``weight_bits``-bit signed carried in
-``int8``; all sums are exact ``int32``.
+This module keeps the legacy class-based surface (``ONN(cfg, w).retrieve``)
+as a thin delegating shim so existing scripts keep working; it emits a
+``DeprecationWarning`` on construction.  ``ONNConfig``, ``ONNResult``,
+``async_sweep`` and ``validate_weights`` are re-exported for old import
+paths.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import NamedTuple, Optional
+import warnings
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import coupling as coupling_lib
-from repro.core import oscillator as osc
-from repro.core.quantization import check_weight_range
-
-
-@dataclasses.dataclass(frozen=True)
-class ONNConfig:
-    """Configuration of one digital ONN instance."""
-
-    n: int
-    weight_bits: int = 5
-    phase_bits: int = 4
-    architecture: str = "hybrid"  # "recurrent" | "hybrid"
-    mode: str = "functional"  # "functional" | "rtl"
-    max_cycles: int = 100
-    sync_jitter: bool = False  # randomize enable-signal offset (rtl hybrid)
-    serial_chunk: int = 0  # >0: chunked serial schedule for the weighted sum
-    use_kernel: bool = False  # route the weighted sum through the Pallas kernel
-
-    def __post_init__(self) -> None:
-        if self.architecture not in ("recurrent", "hybrid"):
-            raise ValueError(f"unknown architecture {self.architecture!r}")
-        if self.mode not in ("functional", "rtl"):
-            raise ValueError(f"unknown mode {self.mode!r}")
-
-    @property
-    def clocks_per_cycle(self) -> int:
-        return 1 << self.phase_bits
-
-
-class ONNResult(NamedTuple):
-    """Outcome of one ONN run.
-
-    ``settle_cycle``: first oscillation cycle at which the phase state stopped
-    changing (units of paper Table 7); only meaningful where ``settled``.
-    ``cycled``: the synchronous dynamics entered a period-2 orbit (a Hopfield
-    limit cycle — reported as a time-out, as the paper excludes them).
-    """
-
-    final_phase: jax.Array
-    final_sigma: jax.Array
-    settle_cycle: jax.Array
-    settled: jax.Array
-    cycled: jax.Array
-
-
-def _weighted_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
-    if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
-
-        return kernel_ops.coupling_sum(w, sigma)
-    if cfg.serial_chunk > 0:
-        return coupling_lib.weighted_sum_serial(w, sigma, chunk=cfg.serial_chunk)
-    return coupling_lib.weighted_sum_parallel(w, sigma)
+from repro.core import dynamics
+from repro.core.dynamics import (  # noqa: F401 — legacy import surface
+    ONNConfig,
+    ONNResult,
+    OnnParams,
+    async_sweep,
+    validate_weights,
+)
 
 
 class ONN:
-    """A fully connected digital ONN with quantized coupling weights."""
+    """Deprecated: use the pure functions in :mod:`repro.core.dynamics`.
+
+    The class baked its weights into every jit trace (``static_argnums=0``
+    over ``self``), recompiling per problem instance; the functional API
+    traces weights, so this shim merely stores an ``OnnParams`` pytree and
+    delegates.
+    """
 
     def __init__(
         self,
@@ -95,178 +50,34 @@ class ONN:
         weights: jax.Array,
         bias: Optional[jax.Array] = None,
     ) -> None:
-        if weights.shape != (config.n, config.n):
-            raise ValueError(f"weights {weights.shape} != ({config.n}, {config.n})")
-        if weights.dtype != jnp.int8:
-            raise TypeError(f"weights must be int8, got {weights.dtype}")
+        warnings.warn(
+            "repro.core.onn.ONN is deprecated; use the functional API in "
+            "repro.core.dynamics (or the repro.api facade): make_params + "
+            "run/retrieve",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.config = config
-        self.weights = weights
-        self.bias = bias if bias is not None else jnp.zeros((config.n,), jnp.int32)
+        self.params = dynamics.make_params(config, weights, bias)
 
-    # -- state ---------------------------------------------------------------
+    @property
+    def weights(self) -> jax.Array:
+        return self.params.weights
+
+    @property
+    def bias(self) -> jax.Array:
+        return self.params.bias
 
     def initial_phase(self, sigma0: jax.Array) -> jax.Array:
-        """Canonical phases (0 / half-period) for an initial spin pattern."""
-        return osc.phase_of_spin(sigma0, self.config.phase_bits)
-
-    # -- functional mode ------------------------------------------------------
+        return dynamics.initial_phase(self.config, sigma0)
 
     def functional_step(self, phase: jax.Array) -> jax.Array:
-        """One synchronous phase update (rotating frame)."""
-        cfg = self.config
-        sigma = osc.spin(phase, cfg.phase_bits)
-        s = _weighted_sum(cfg, self.weights, sigma) + self.bias
-        return osc.phase_align(phase, s, cfg.phase_bits)
+        return dynamics.functional_update(self.config, self.params, phase)
 
-    # -- rtl mode --------------------------------------------------------------
-
-    def _rtl_step(self, carry, t):
-        """One slow-clock edge in the lab frame."""
-        cfg = self.config
-        phase, sigma_lab_prev = carry
-        half = cfg.clocks_per_cycle // 2
-        ref_phase = jnp.mod(t, cfg.clocks_per_cycle)
-        sign_ref = jnp.where(ref_phase < half, jnp.int32(1), jnp.int32(-1))
-        # Lab-frame spins *now*:
-        theta_lab = (phase.astype(jnp.int32) + ref_phase) % cfg.clocks_per_cycle
-        sigma_lab = osc.spin(theta_lab.astype(jnp.uint8), cfg.phase_bits)
-        # The hybrid's serialized sum consumed amplitudes from one slow clock
-        # earlier; the recurrent adder tree is combinational (current amps).
-        sigma_used = sigma_lab_prev if cfg.architecture == "hybrid" else sigma_lab
-        s = _weighted_sum(cfg, self.weights, sigma_used) + self.bias
-        # Reference level is absolute (high iff S>0); aligning the oscillator
-        # to it in the lab frame == rotating-frame target sign(S)·sign_ref.
-        s_rel = s * sign_ref
-        new_phase = osc.phase_align(phase, s_rel, cfg.phase_bits)
-        return (new_phase, sigma_lab), new_phase
-
-    # -- full runs --------------------------------------------------------------
-
-    @functools.partial(jax.jit, static_argnums=0)
     def run(self, phase0: jax.Array, key: Optional[jax.Array] = None) -> ONNResult:
-        """Evolve to steady state; returns phases, settle cycle, flags.
+        return dynamics.run(self.config, self.params, phase0, key)
 
-        ``phase0``: (N,) uint8 initial phases.  ``key`` seeds the enable-signal
-        jitter (rtl hybrid with ``sync_jitter``).
-        """
-        cfg = self.config
-        if cfg.mode == "functional":
-            return self._run_functional(phase0)
-        return self._run_rtl(phase0, key)
-
-    def _run_functional(self, phase0: jax.Array) -> ONNResult:
-        cfg = self.config
-
-        def body(carry, _):
-            phase, prev_phase, settle, settled, cycled, cycle = carry
-            new_phase = self.functional_step(phase)
-            unchanged = jnp.all(new_phase == phase)
-            is_cycle2 = jnp.logical_and(jnp.all(new_phase == prev_phase), ~unchanged)
-            settle = jnp.where(jnp.logical_and(unchanged, ~settled), cycle, settle)
-            settled = jnp.logical_or(settled, unchanged)
-            cycled = jnp.logical_or(cycled, jnp.logical_and(is_cycle2, ~settled))
-            return (new_phase, phase, settle, settled, cycled, cycle + 1), None
-
-        init = (
-            phase0,
-            jnp.full_like(phase0, 255),  # sentinel: no previous state
-            jnp.int32(cfg.max_cycles),
-            jnp.bool_(False),
-            jnp.bool_(False),
-            jnp.int32(0),
-        )
-        (phase, _, settle, settled, cycled, _), _ = jax.lax.scan(
-            body, init, None, length=cfg.max_cycles
-        )
-        return ONNResult(
-            final_phase=phase,
-            final_sigma=osc.spin(phase, cfg.phase_bits),
-            settle_cycle=settle,
-            settled=settled,
-            cycled=cycled,
-        )
-
-    def _run_rtl(self, phase0: jax.Array, key: Optional[jax.Array]) -> ONNResult:
-        cfg = self.config
-        clocks = cfg.clocks_per_cycle
-        if cfg.sync_jitter:
-            if key is None:
-                raise ValueError("sync_jitter requires a PRNG key")
-            t0 = jax.random.randint(key, (), 0, clocks, dtype=jnp.int32)
-        else:
-            t0 = jnp.int32(0)
-
-        half = clocks // 2
-        ref0 = jnp.mod(t0, clocks)
-        theta_lab0 = (phase0.astype(jnp.int32) + ref0) % clocks
-        sigma_lab0 = osc.spin(theta_lab0.astype(jnp.uint8), cfg.phase_bits)
-
-        def cycle_body(carry, cycle_idx):
-            phase, sigma_prev, settle, settled, cycled, snapshot = carry
-
-            def clock_body(inner, k):
-                (ph, sp), _ = self._rtl_step(inner, t0 + cycle_idx * clocks + k)
-                return (ph, sp), None
-
-            (new_phase, new_sigma_prev), _ = jax.lax.scan(
-                clock_body, (phase, sigma_prev), jnp.arange(clocks)
-            )
-            unchanged = jnp.all(new_phase == phase)
-            is_cycle2 = jnp.logical_and(jnp.all(new_phase == snapshot), ~unchanged)
-            settle = jnp.where(jnp.logical_and(unchanged, ~settled), cycle_idx, settle)
-            settled = jnp.logical_or(settled, unchanged)
-            cycled = jnp.logical_or(cycled, jnp.logical_and(is_cycle2, ~settled))
-            return (new_phase, new_sigma_prev, settle, settled, cycled, phase), None
-
-        init = (
-            phase0,
-            sigma_lab0,
-            jnp.int32(cfg.max_cycles),
-            jnp.bool_(False),
-            jnp.bool_(False),
-            jnp.full_like(phase0, 255),
-        )
-        (phase, _, settle, settled, cycled, _), _ = jax.lax.scan(
-            cycle_body, init, jnp.arange(cfg.max_cycles)
-        )
-        return ONNResult(
-            final_phase=phase,
-            final_sigma=osc.spin(phase, cfg.phase_bits),
-            settle_cycle=settle,
-            settled=settled,
-            cycled=cycled,
-        )
-
-    # -- batched retrieval -------------------------------------------------------
-
-    @functools.partial(jax.jit, static_argnums=0)
-    def retrieve(self, sigma0_batch: jax.Array, keys: Optional[jax.Array] = None) -> ONNResult:
-        """Run a batch of initial spin patterns to steady state (vmapped)."""
-        phase0 = jax.vmap(self.initial_phase)(sigma0_batch)
-        if keys is None:
-            keys = jax.random.split(jax.random.PRNGKey(0), sigma0_batch.shape[0])
-        return jax.vmap(lambda p, k: self.run(p, k))(phase0, keys)
-
-
-def async_sweep(w: jax.Array, sigma: jax.Array, order: jax.Array) -> jax.Array:
-    """One asynchronous (sequential) Hopfield sweep: σ_i ← sign(Σ W_ij σ_j).
-
-    Used by the Ising solver and by the energy-monotonicity property tests
-    (asynchronous updates on symmetric zero-diagonal couplings never increase
-    the Hamiltonian).  Ties keep the current spin.
-    """
-
-    def body(s, i):
-        field = w[i].astype(jnp.int32) @ s.astype(jnp.int32)
-        new_si = jnp.where(field > 0, 1, jnp.where(field < 0, -1, s[i])).astype(s.dtype)
-        return s.at[i].set(new_si), None
-
-    sigma, _ = jax.lax.scan(body, sigma, order)
-    return sigma
-
-
-def validate_weights(weights: jax.Array, bits: int) -> None:
-    """Raise if the coupling matrix is out of the representable range."""
-    ok = bool(check_weight_range(weights, bits))
-    if not ok:
-        raise ValueError(f"coupling weights exceed {bits}-bit signed range")
+    def retrieve(
+        self, sigma0_batch: jax.Array, keys: Optional[jax.Array] = None
+    ) -> ONNResult:
+        return dynamics.retrieve(self.config, self.params, sigma0_batch, keys)

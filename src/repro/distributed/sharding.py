@@ -100,3 +100,46 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
 def data_spec(rules: Dict[str, Any], *axes: Optional[str]) -> P:
     """PartitionSpec for model inputs (tokens, frames, caches)."""
     return logical_to_pspec(tuple(axes), rules)
+
+
+# ---------------------------------------------------------------------------
+# ONN parameter sharding (the paper's deferred multi-FPGA clustering)
+# ---------------------------------------------------------------------------
+
+
+def onn_weight_spec(multi_pod: bool = False, layout: str = "row") -> P:
+    """PartitionSpec for the (N, N) coupling matrix on the production mesh.
+
+    ``layout``:
+      * ``"row"``        — rows over ALL mesh axes (no contraction psum;
+        the σ' all-gather is the only collective).  Default for large N.
+      * ``"2d"``         — P("model", "data") 2-D sharding (paper-faithful
+        multi-FPGA mapping; each step psums over "data").
+      * ``"replicated"`` — W on every chip (FPGA-scale N; parallelism is
+        over the request batch instead).
+    """
+    all_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if layout == "row":
+        return P(all_axes, None)
+    if layout == "2d":
+        return P("model", "data")
+    if layout == "replicated":
+        return P(None, None)
+    raise ValueError(f"unknown ONN weight layout {layout!r}")
+
+
+def onn_param_shardings(
+    mesh: Mesh, multi_pod: bool = False, layout: str = "row"
+):
+    """``OnnParams``-shaped NamedShardings: shard W, replicate the bias.
+
+    Because the functional API traces params, ``jax.device_put(params,
+    onn_param_shardings(mesh))`` reshards a live solver without recompiling
+    ``run``/``retrieve`` for a new weight matrix of the same N.
+    """
+    from repro.core.dynamics import OnnParams
+
+    return OnnParams(
+        weights=NamedSharding(mesh, onn_weight_spec(multi_pod, layout)),
+        bias=NamedSharding(mesh, P(None)),
+    )

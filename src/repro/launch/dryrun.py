@@ -37,6 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.configs.onn import ONN_CELLS
+from repro.core import dynamics as dyn
 from repro.distributed import sharding as shrules
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import make_production_mesh, mesh_devices
@@ -524,24 +525,21 @@ def run_onn_cell(
     all_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     rep = NamedSharding(mesh, P(None, None))
 
-    def sign_update(field, s):
-        return jnp.where(field > 0, 1, jnp.where(field < 0, -1, s)).astype(jnp.int8)
+    # The update rule is the shared functional core (repro.core.dynamics);
+    # only the sharding annotations are variant-specific here.
+    onn_cfg = dyn.ONNConfig(n=n, max_cycles=cycles, backend="parallel")
+    sign_update = dyn.sign_update
 
     def matvec(w, s):
-        return jnp.einsum(
-            "ij,bj->bi", w.astype(jnp.int32), s.astype(jnp.int32),
-            preferred_element_type=jnp.int32,
-        )
+        return dyn.weighted_sum(onn_cfg, w, s)
 
     if variant == "baseline2d":
         # FPGA-scale cells (N=506 does not divide the mesh axes) keep W
         # replicated and parallelize over the request batch — the right
         # production layout for a network whose couplings fit one chip.
         # Pod-scale cells 2-D-shard W (the paper's multi-FPGA clustering).
-        if n % 16 == 0:
-            w_sh = NamedSharding(mesh, P("model", "data"))
-        else:
-            w_sh = NamedSharding(mesh, P(None, None))
+        layout = "2d" if n % 16 == 0 else "replicated"
+        w_sh = NamedSharding(mesh, shrules.onn_weight_spec(multi_pod, layout))
         w_sds = jax.ShapeDtypeStruct((n, n), jnp.int8)
         sig_rep = rep if n % 16 == 0 else NamedSharding(
             mesh, P(("pod", "data") if multi_pod else "data", None)
@@ -556,7 +554,7 @@ def run_onn_cell(
             return out
 
     elif variant == "rowpar":
-        w_sh = NamedSharding(mesh, P(all_axes, None))
+        w_sh = NamedSharding(mesh, shrules.onn_weight_spec(multi_pod, "row"))
         w_sds = jax.ShapeDtypeStruct((n, n), jnp.int8)
 
         def onn_sweep(w, sigma):
@@ -572,7 +570,7 @@ def run_onn_cell(
 
     elif variant in ("rowpar_bitpack", "rowpar_bp_int4"):
         int4 = variant.endswith("int4")
-        w_sh = NamedSharding(mesh, P(all_axes, None))
+        w_sh = NamedSharding(mesh, shrules.onn_weight_spec(multi_pod, "row"))
         w_sds = jax.ShapeDtypeStruct((n, n // 2 if int4 else n), jnp.int8 if not int4 else jnp.uint8)
 
         row_sharded = NamedSharding(mesh, P(None, all_axes))

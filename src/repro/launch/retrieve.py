@@ -1,14 +1,19 @@
 """ONN pattern-retrieval service: the paper's task as a batched server.
 
 Loads (or trains, via Diederich–Opper I) coupling weights for a letter
-dataset, then serves batches of corrupted patterns: each request batch is
-evolved to steady state on the ONN and the retrieved patterns + settle
-statistics are returned.  This is the FPGA demo of paper Fig. 7 as a
-production serving loop — and the end-to-end driver for the ONN side.
+dataset into a ``repro.api.RetrievalSolver``, then serves batches of
+corrupted patterns: each request batch is evolved to steady state on the ONN
+and the retrieved patterns + settle statistics are returned.  This is the
+FPGA demo of paper Fig. 7 as a production serving loop — and the end-to-end
+driver for the ONN side.
+
+Because the solver is the functional pytree API (weights traced, config
+static), re-training or hot-swapping the weight matrix does NOT recompile
+the serving executable: any same-N solver reuses the first compile.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.retrieve --dataset 10x10 \
-      --corruption 0.25 --requests 256 --architecture hybrid
+      --corruption 0.25 --requests 256 --architecture hybrid --backend pallas
 """
 
 from __future__ import annotations
@@ -16,45 +21,40 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.learning import diederich_opper_i
-from repro.core.onn import ONN, ONNConfig
-from repro.core.quantization import quantize_weights
+from repro.api import RetrievalSolver
 from repro.data import patterns as pat
 
 
-def build_onn(
+def build_solver(
     dataset: str,
     architecture: str = "hybrid",
     mode: str = "functional",
     weight_bits: int = 5,
     phase_bits: int = 4,
     max_cycles: int = 100,
-    use_kernel: bool = False,
-) -> tuple:
+    backend: str = "parallel",
+) -> Tuple[RetrievalSolver, jax.Array]:
+    """Train a solver for one letter dataset; returns (solver, patterns)."""
     xi = pat.load_dataset(dataset)  # (P, N) ±1
-    n = xi.shape[1]
-    do = diederich_opper_i(xi)
-    qw = quantize_weights(do.weights, bits=weight_bits)
-    cfg = ONNConfig(
-        n=n,
+    solver = RetrievalSolver.from_patterns(
+        xi,
         weight_bits=weight_bits,
         phase_bits=phase_bits,
         architecture=architecture,
         mode=mode,
         max_cycles=max_cycles,
-        use_kernel=use_kernel,
+        backend=backend,
     )
-    return ONN(cfg, qw.values), xi
+    return solver, xi
 
 
 def serve_requests(
-    onn: ONN,
+    solver: RetrievalSolver,
     xi: jax.Array,
     corruption: float,
     n_requests: int,
@@ -69,7 +69,7 @@ def serve_requests(
     corrupted = jax.vmap(lambda t, k: pat.corrupt(t, k, corruption))(targets, ckeys)
 
     t0 = time.time()
-    result = onn.retrieve(corrupted, jax.random.split(k3, n_requests))
+    result = solver.solve(corrupted, k3)  # one key, split per request
     jax.block_until_ready(result.final_sigma)
     dt = time.time() - t0
 
@@ -77,7 +77,8 @@ def serve_requests(
     out = result.final_sigma.astype(jnp.int32)
     match = jnp.all(out == targets, axis=1) | jnp.all(out == -targets, axis=1)
     acc = float(jnp.mean(match.astype(jnp.float32)))
-    settle = float(jnp.mean(jnp.where(result.settled, result.settle_cycle, onn.config.max_cycles)))
+    max_cycles = solver.config.max_cycles
+    settle = float(jnp.mean(jnp.where(result.settled, result.settle_cycle, max_cycles)))
     return {
         "n_oscillators": n,
         "requests": n_requests,
@@ -97,14 +98,18 @@ def main() -> None:
     ap.add_argument("--mode", default="functional", choices=["functional", "rtl"])
     ap.add_argument("--corruption", type=float, default=0.25)
     ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--backend", default="parallel",
+                    choices=["parallel", "serial", "pallas"],
+                    help="weighted-sum schedule for the coupling sum")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route the coupling sum through the Pallas kernel")
+                    help="deprecated alias for --backend pallas")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    onn, xi = build_onn(
-        args.dataset, args.architecture, args.mode, use_kernel=args.use_kernel
+    backend = "pallas" if args.use_kernel else args.backend
+    solver, xi = build_solver(
+        args.dataset, args.architecture, args.mode, backend=backend
     )
-    print(json.dumps(serve_requests(onn, xi, args.corruption, args.requests, args.seed), indent=1))
+    print(json.dumps(serve_requests(solver, xi, args.corruption, args.requests, args.seed), indent=1))
 
 
 if __name__ == "__main__":

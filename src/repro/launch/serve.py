@@ -5,6 +5,10 @@ decoded token-by-token with the KV/state cache donated between steps.  On a
 real pod the same functions run under the production mesh; here they run on
 CPU for the examples and tests.
 
+Like the ONN side (``repro.launch.retrieve`` / ``repro.api.Solver``), this
+loop is functional: params are a traced pytree fed to jitted pure step
+functions, so swapping checkpoints of the same shape never recompiles.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --tokens 32
 """

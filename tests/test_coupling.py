@@ -3,8 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # optional dep (see pyproject.toml): skip, not fail
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import coupling
 
@@ -16,7 +19,11 @@ def _random_instance(rng, n, batch=None):
     return w, sigma
 
 
-@pytest.mark.parametrize("n,chunk", [(8, 1), (48, 2), (64, 16), (506, 11), (128, 128)])
+@pytest.mark.parametrize(
+    "n,chunk",
+    [(8, 1), (48, 2), (64, 16), (506, 11), (128, 128),
+     (10, 3), (48, 7), (506, 100), (9, 16)],  # N not divisible by chunk
+)
 def test_serial_equals_parallel(n, chunk):
     rng = np.random.default_rng(n)
     w, sigma = _random_instance(rng, n)
@@ -78,4 +85,4 @@ def test_shape_validation():
     with pytest.raises(ValueError):
         coupling.weighted_sum_parallel(w, jnp.ones((5,), jnp.int8))
     with pytest.raises(ValueError):
-        coupling.weighted_sum_serial(jnp.zeros((4, 4), jnp.int8), jnp.ones((4,), jnp.int8), chunk=3)
+        coupling.weighted_sum_serial(jnp.zeros((4, 4), jnp.int8), jnp.ones((4,), jnp.int8), chunk=0)

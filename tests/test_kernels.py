@@ -9,8 +9,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # optional dep (see pyproject.toml): skip, not fail
+    from hypothesis_fallback import given, settings, st
 
 from repro.kernels import coupling_kernel as kk
 from repro.kernels import ops, ref

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.retrieve import build_onn, serve_requests
+from repro.launch.retrieve import build_solver, serve_requests
 from repro.launch.serve import serve
 from repro.launch.train import train
 
@@ -41,17 +41,17 @@ def test_serve_loop(arch):
 
 
 def test_onn_retrieval_service():
-    onn, xi = build_onn("7x6", "hybrid")
-    out = serve_requests(onn, xi, corruption=0.10, n_requests=64)
+    solver, xi = build_solver("7x6", "hybrid")
+    out = serve_requests(solver, xi, corruption=0.10, n_requests=64)
     assert out["accuracy"] >= 0.9, out  # paper: ~100 % at 10 % corruption
     assert out["mean_settle_cycles"] < 50
 
 
 def test_onn_retrieval_via_pallas_kernel():
     """The Pallas coupling kernel must reproduce the jnp path exactly."""
-    onn_k, xi = build_onn("5x4", "hybrid", use_kernel=True)
-    onn_j, _ = build_onn("5x4", "hybrid", use_kernel=False)
-    out_k = serve_requests(onn_k, xi, corruption=0.10, n_requests=32)
-    out_j = serve_requests(onn_j, xi, corruption=0.10, n_requests=32)
+    solver_k, xi = build_solver("5x4", "hybrid", backend="pallas")
+    solver_j, _ = build_solver("5x4", "hybrid", backend="parallel")
+    out_k = serve_requests(solver_k, xi, corruption=0.10, n_requests=32)
+    out_j = serve_requests(solver_j, xi, corruption=0.10, n_requests=32)
     assert out_k["accuracy"] == out_j["accuracy"], (out_k, out_j)
     assert out_k["mean_settle_cycles"] == out_j["mean_settle_cycles"]

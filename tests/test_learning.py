@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # optional dep (see pyproject.toml): skip, not fail
+    from hypothesis_fallback import given, settings, st
 
 from repro.core import learning
 from repro.core.quantization import quantize_weights

@@ -1,35 +1,44 @@
-"""ONN dynamics: architecture equivalence, energy properties, retrieval."""
+"""ONN dynamics: architecture equivalence, energy properties, retrieval.
+
+Exercises the functional pytree API (repro.core.dynamics / repro.api); the
+deprecated ONN class shim gets one delegation test at the bottom.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import ONN, ONNConfig, async_sweep, hamiltonian
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:  # optional dep (see pyproject.toml): skip, not fail
+    from hypothesis_fallback import given, settings, st
+
+from repro import api
+from repro.core import hamiltonian
+from repro.core.dynamics import ONNConfig, async_sweep
 from repro.core.energy import is_local_minimum
 from repro.core.learning import diederich_opper_i
 from repro.core.quantization import quantize_weights
 from repro.data import corrupt_batch, load_dataset
 
 
-def _trained_onn(name, **cfg_kwargs):
+def _trained(name, **cfg_kwargs):
     xi = load_dataset(name)
     q = quantize_weights(diederich_opper_i(xi).weights)
-    n = xi.shape[1]
-    cfg = ONNConfig(n=n, **cfg_kwargs)
-    return ONN(cfg, q.values), xi, q.values
+    cfg = ONNConfig(n=xi.shape[1], **cfg_kwargs)
+    return cfg, api.make_params(cfg, q.values), xi, q.values
 
 
 def test_functional_equals_rtl_recurrent():
     """Per-clock snap updates are idempotent within a half-period ⇒ the
     clock-accurate recurrent run matches the functional run exactly."""
-    onn_f, xi, _ = _trained_onn("5x4", architecture="recurrent", mode="functional")
-    onn_r, _, _ = _trained_onn("5x4", architecture="recurrent", mode="rtl")
+    cfg_f, params, xi, _ = _trained("5x4", architecture="recurrent", mode="functional")
+    cfg_r, _, _, _ = _trained("5x4", architecture="recurrent", mode="rtl")
     corrupted = corrupt_batch(xi[1], jax.random.PRNGKey(3), 0.25, 24)
-    out_f = onn_f.retrieve(corrupted)
-    out_r = onn_r.retrieve(corrupted)
+    out_f = api.retrieve(cfg_f, params, corrupted)
+    out_r = api.retrieve(cfg_r, params, corrupted)
     np.testing.assert_array_equal(
         np.asarray(out_f.final_sigma), np.asarray(out_r.final_sigma)
     )
@@ -37,31 +46,30 @@ def test_functional_equals_rtl_recurrent():
 
 def test_hybrid_matches_recurrent_dynamics():
     """Paper Table 6: hybrid and recurrent retrieve the same patterns."""
-    onn_h, xi, _ = _trained_onn("7x6", architecture="hybrid", mode="rtl")
-    onn_r, _, _ = _trained_onn("7x6", architecture="recurrent", mode="rtl")
+    cfg_h, params, xi, _ = _trained("7x6", architecture="hybrid", mode="rtl")
+    cfg_r, _, _, _ = _trained("7x6", architecture="recurrent", mode="rtl")
     for noise in (0.10, 0.25):
         corrupted = corrupt_batch(xi[0], jax.random.PRNGKey(11), noise, 32)
         acc_h = jnp.mean(
-            jnp.all(onn_h.retrieve(corrupted).final_sigma == xi[0], axis=-1)
+            jnp.all(api.retrieve(cfg_h, params, corrupted).final_sigma == xi[0], axis=-1)
         )
         acc_r = jnp.mean(
-            jnp.all(onn_r.retrieve(corrupted).final_sigma == xi[0], axis=-1)
+            jnp.all(api.retrieve(cfg_r, params, corrupted).final_sigma == xi[0], axis=-1)
         )
         assert abs(float(acc_h) - float(acc_r)) < 0.15
 
 
 def test_trained_patterns_are_stable_states():
-    onn, xi, w = _trained_onn("5x4", mode="functional")
-    out = onn.retrieve(xi)  # start exactly at the patterns
+    cfg, params, xi, _ = _trained("5x4", mode="functional")
+    out = api.retrieve(cfg, params, xi)  # start exactly at the patterns
     np.testing.assert_array_equal(np.asarray(out.final_sigma), np.asarray(xi))
     assert bool(jnp.all(out.settle_cycle == 0))
 
 
 def test_retrieval_reaches_local_minimum():
-    onn, xi, w = _trained_onn("5x4", mode="functional")
+    cfg, params, xi, w = _trained("5x4", mode="functional")
     corrupted = corrupt_batch(xi[0], jax.random.PRNGKey(0), 0.10, 16)
-    out = onn.retrieve(corrupted)
-    w_sym = ((w.astype(jnp.int32) + w.astype(jnp.int32).T) // 2).astype(jnp.int32)
+    out = api.retrieve(cfg, params, corrupted)
     # settled states are fixed points of the sign dynamics
     for s, ok in zip(np.asarray(out.final_sigma), np.asarray(out.settled)):
         if ok:
@@ -69,15 +77,17 @@ def test_retrieval_reaches_local_minimum():
             assert np.all(s * field >= 0)
 
 
-def test_serial_chunk_and_kernel_paths_match_default():
-    onn_a, xi, w = _trained_onn("5x4", mode="functional")
-    cfg_b = ONNConfig(n=xi.shape[1], mode="functional", serial_chunk=4)
-    cfg_c = ONNConfig(n=xi.shape[1], mode="functional", use_kernel=True)
-    onn_b, onn_c = ONN(cfg_b, w), ONN(cfg_c, w)
-    corrupted = corrupt_batch(xi[2], jax.random.PRNGKey(5), 0.25, 8)
-    ref = np.asarray(onn_a.retrieve(corrupted).final_sigma)
-    np.testing.assert_array_equal(ref, np.asarray(onn_b.retrieve(corrupted).final_sigma))
-    np.testing.assert_array_equal(ref, np.asarray(onn_c.retrieve(corrupted).final_sigma))
+def test_step_scan_matches_run():
+    """Driving init_state + step by hand reproduces run's scanned result."""
+    cfg, params, xi, _ = _trained("5x4", mode="functional")
+    corrupted = corrupt_batch(xi[0], jax.random.PRNGKey(9), 0.25, 1)[0]
+    state = api.init_state(cfg, corrupted)
+    for _ in range(cfg.max_cycles):
+        state = api.step(cfg, params, state)
+    ref = api.run(cfg, params, api.initial_phase(cfg, corrupted))
+    np.testing.assert_array_equal(np.asarray(state.phase), np.asarray(ref.final_phase))
+    assert bool(state.settled) == bool(ref.settled)
+    assert int(state.settle_cycle) == int(ref.settle_cycle)
 
 
 @settings(max_examples=15, deadline=None)
@@ -114,17 +124,29 @@ def test_property_async_fixed_point_is_local_minimum(seed):
 
 def test_synchronous_dynamics_period_two_detection():
     """Synchronous Hopfield can 2-cycle; the run must flag it, not hang."""
-    w = jnp.asarray([[0, -15], [-15, 0]], jnp.int8) * -1  # ferromagnetic pair
-    w = jnp.asarray([[0, 15], [15, 0]], jnp.int8) * -1  # antiferro: frustration-free 2-cycle driver
+    w = jnp.asarray([[0, 15], [15, 0]], jnp.int8) * -1  # antiferro pair
     cfg = ONNConfig(n=2, mode="functional", max_cycles=10)
-    onn = ONN(cfg, w)
+    params = api.make_params(cfg, w)
     # aligned spins under antiferro coupling flip together forever
-    phase0 = onn.initial_phase(jnp.asarray([1, 1], jnp.int8))
-    out = onn.run(phase0)
+    phase0 = api.initial_phase(cfg, jnp.asarray([1, 1], jnp.int8))
+    out = api.run(cfg, params, phase0)
     assert bool(out.cycled) and not bool(out.settled)
 
 
 def test_max_cycles_bound_and_settle_units():
-    onn, xi, _ = _trained_onn("3x3", mode="functional", max_cycles=7)
-    out = onn.retrieve(xi)
+    cfg, params, xi, _ = _trained("3x3", mode="functional", max_cycles=7)
+    out = api.retrieve(cfg, params, xi)
     assert np.all(np.asarray(out.settle_cycle) <= 7)
+
+
+def test_deprecated_onn_class_delegates():
+    """The legacy ONN wrapper warns and reproduces the functional result."""
+    from repro.core.onn import ONN
+
+    cfg, params, xi, w = _trained("5x4", mode="functional")
+    with pytest.warns(DeprecationWarning):
+        onn = ONN(cfg, w)
+    corrupted = corrupt_batch(xi[2], jax.random.PRNGKey(5), 0.25, 8)
+    ref = api.retrieve(cfg, params, corrupted)
+    out = onn.retrieve(corrupted)
+    np.testing.assert_array_equal(np.asarray(ref.final_sigma), np.asarray(out.final_sigma))

@@ -21,10 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: whole module is property-based
 from hypothesis import given, settings, strategies as st
 
 from repro.core import coupling, energy, oscillator as osc
-from repro.core.onn import async_sweep
+from repro.core.dynamics import async_sweep
 from repro.core.quantization import (
     pack_int4, quantize_weights, symmetric_qmax, unpack_int4
 )

@@ -3,9 +3,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra import numpy as hnp
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+except ModuleNotFoundError:  # optional dep (see pyproject.toml): skip, not fail
+    from hypothesis_fallback import given, settings, st, hnp
 
 from repro.core import quantization as q
 
