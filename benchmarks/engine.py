@@ -1,0 +1,134 @@
+"""Engine throughput vs bucket policy (the software Fig-12 trade study).
+
+Replays one fixed stream of mixed retrieval + max-cut requests through
+``repro.engine`` under several bucket policies and measures wall time,
+request throughput, compile counts and pad waste — the serving-side version
+of the paper's time-to-solution vs. resources trade: bigger slabs amortize
+dispatch (throughput) at the price of padded lanes and queueing latency.
+
+Policies run in one process and share the jit cache, so the first policy
+pays the compiles later ones may reuse — ``retrieve_traces`` is reported
+per policy so the compile effect is visible next to the wall time.
+
+  PYTHONPATH=src python -m benchmarks.engine                      # full
+  PYTHONPATH=src python -m benchmarks.engine --smoke --out BENCH_engine.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine as engine_lib
+from repro.core import dynamics
+from repro.core.ising import random_graph
+from repro.data import patterns as pat
+
+POLICIES: Dict[str, Dict[str, Any]] = {
+    # throughput-first: coalesce lanes, pad N to pow2, big slabs
+    "coalesce-pow2": {"batch_buckets": (1, 2, 4, 8, 16, 32), "n_policy": "pow2", "coalesce": True},
+    # exact N (no masked oscillators), still coalescing batches
+    "coalesce-exact-n": {"batch_buckets": (1, 2, 4, 8, 16, 32), "n_policy": "exact", "coalesce": True},
+    # latency-first: every request in its own (padded) slab
+    "no-coalesce": {"batch_buckets": (1, 2, 4, 8, 16, 32), "n_policy": "pow2", "coalesce": False},
+    # small slabs: bounded batch at the cost of more dispatches
+    "small-buckets": {"batch_buckets": (1, 2, 4), "n_policy": "pow2", "coalesce": True},
+}
+
+
+def _request_stream(n_requests: int, seed: int):
+    """A deterministic mixed stream: two retrieval sizes + max-cut."""
+    rng = np.random.default_rng(seed)
+    xi_small = pat.load_dataset("7x6")  # N=42 → pow2 bucket 64
+    xi_large = pat.load_dataset("10x10")  # N=100 → pow2 bucket 128
+    stream = []
+    key = jax.random.PRNGKey(seed)
+    for i in range(n_requests):
+        key, k = jax.random.split(key)
+        kind = i % 4
+        if kind == 3:
+            adj = random_graph(k, int(rng.integers(16, 40)), 0.5)
+            stream.append(("cuts", adj))
+        else:
+            xi = xi_small if kind == 0 else xi_large
+            row = int(rng.integers(0, xi.shape[0]))
+            b = int(rng.integers(1, 5))
+            batch = jax.vmap(lambda kk: pat.corrupt(xi[row], kk, 0.25))(
+                jax.random.split(k, b)
+            )
+            stream.append(("small" if kind == 0 else "large", batch))
+    return xi_small, xi_large, stream
+
+
+def run_policy(name: str, stream, xi_small, xi_large, sweeps: int) -> Dict[str, Any]:
+    cfg = POLICIES[name]
+    eng = engine_lib.Engine(jax.random.PRNGKey(0), **cfg)
+    eng.install("small", "retrieval", xi=xi_small)
+    eng.install("large", "retrieval", xi=xi_large)
+    eng.install("cuts", "maxcut", sweeps=sweeps)
+
+    before = dict(dynamics.TRACE_COUNTER)
+    t0 = time.perf_counter()
+    futures = [eng.submit(engine_lib.Request(w, p)) for w, p in stream]
+    eng.drain()
+    for f in futures:
+        jax.block_until_ready(getattr(f.result(), "final_sigma", f.result()))
+    wall = time.perf_counter() - t0
+    stats = eng.stats()
+    lanes = sum(eng.solver(w).lane_count(p) for w, p in stream)
+    return {
+        "policy": name,
+        "requests": len(stream),
+        "lanes": lanes,
+        "wall_s": round(wall, 3),
+        "requests_per_s": round(len(stream) / wall, 2),
+        "lanes_per_s": round(lanes / wall, 2),
+        "slabs": stats["slabs"],
+        "pad_fraction": round(stats["pad_fraction"], 4),
+        "retrieve_traces": dynamics.TRACE_COUNTER["retrieve"] - before.get("retrieve", 0),
+        "planner_cost_rate": stats["planner"]["cost_rate_s_per_unit"],
+    }
+
+
+def main(smoke: bool = False, out: Optional[str] = None, requests: Optional[int] = None) -> List[Dict]:
+    n_requests = requests or (24 if smoke else 120)
+    sweeps = 8 if smoke else 32
+    xi_small, xi_large, stream = _request_stream(n_requests, seed=0)
+    rows = []
+    print("# engine throughput vs bucket policy (mixed retrieval + max-cut stream)")
+    print("policy,requests,lanes,wall_s,requests_per_s,lanes_per_s,slabs,pad_fraction,retrieve_traces")
+    for name in POLICIES:
+        r = run_policy(name, stream, xi_small, xi_large, sweeps)
+        rows.append(r)
+        print(
+            f"{r['policy']},{r['requests']},{r['lanes']},{r['wall_s']},"
+            f"{r['requests_per_s']},{r['lanes_per_s']},{r['slabs']},"
+            f"{r['pad_fraction']},{r['retrieve_traces']}"
+        )
+    if out:
+        payload = {
+            "bench": "engine",
+            "smoke": smoke,
+            "requests": n_requests,
+            "rows": rows,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small trial counts (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None, requests=args.requests)

@@ -18,7 +18,9 @@ def main() -> None:
     args = ap.parse_args()
     trials = args.trials or (50 if args.quick else 200)
 
-    from benchmarks import capacity, comparison, kernels, maxcut, retrieval, roofline, scaling
+    from benchmarks import (
+        capacity, comparison, engine, kernels, maxcut, retrieval, roofline, scaling,
+    )
 
     sections = [
         ("table2_comparison", comparison.main, {}),
@@ -28,6 +30,7 @@ def main() -> None:
         ("kernels", kernels.main, {}),
         ("maxcut_extra", maxcut.main, {}),
         ("roofline", roofline.main, {}),
+        ("engine_bucket_policies", engine.main, {"smoke": args.quick}),
     ]
     t_all = time.time()
     for name, fn, kw in sections:

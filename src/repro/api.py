@@ -47,6 +47,9 @@ from repro.core.dynamics import (  # noqa: F401 — re-exported API
     init_state,
     initial_phase,
     make_params,
+    pad_config,
+    pad_params,
+    pad_sigma,
     retrieve,
     run,
     sign_update,
@@ -57,6 +60,7 @@ from repro.core.dynamics import (  # noqa: F401 — re-exported API
 from repro.core.ising import MaxCutResult  # noqa: F401
 from repro.core.learning import diederich_opper_i
 from repro.core.quantization import quantize_weights
+from repro.engine.registry import register_solver
 
 
 @runtime_checkable
@@ -103,6 +107,12 @@ class RetrievalSolver:
     ) -> ONNResult:
         return retrieve(self.config, self.params, instance, key)
 
+    def as_engine_solver(self):
+        """This solver as an installable ``repro.engine`` workload adapter."""
+        from repro.engine.adapters import RetrievalEngineSolver
+
+        return RetrievalEngineSolver(solver=self)
+
 
 @dataclasses.dataclass(frozen=True)
 class MaxCutSolver:
@@ -123,3 +133,38 @@ class MaxCutSolver:
         return _ising.solve_maxcut(
             instance, key, sweeps=self.sweeps, weight_bits=self.weight_bits
         )
+
+    def as_engine_solver(self):
+        """This solver as an installable ``repro.engine`` workload adapter."""
+        from repro.engine.adapters import MaxCutEngineSolver
+
+        return MaxCutEngineSolver(solver=self)
+
+
+# ---------------------------------------------------------------------------
+# Engine registration: both Solver implementations serve through repro.engine
+# ---------------------------------------------------------------------------
+
+
+def _retrieval_engine_factory(**kwargs: Any):
+    from repro.engine.adapters import RetrievalEngineSolver
+
+    return RetrievalEngineSolver(**kwargs)
+
+
+def _maxcut_engine_factory(**kwargs: Any):
+    from repro.engine.adapters import MaxCutEngineSolver
+
+    return MaxCutEngineSolver(**kwargs)
+
+
+register_solver(
+    "retrieval",
+    _retrieval_engine_factory,
+    "batched pattern retrieval on a trained ONN (xi= patterns or solver=)",
+)
+register_solver(
+    "maxcut",
+    _maxcut_engine_factory,
+    "annealed async-sweep max-cut (sweeps=, weight_bits=)",
+)

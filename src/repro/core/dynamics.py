@@ -180,6 +180,66 @@ def validate_weights(weights: jax.Array, bits: int) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Masked-lane padding: grow an instance to a bucketed N without changing it
+# ---------------------------------------------------------------------------
+#
+# The serving engine (repro.engine) pads every request to a small set of
+# (batch, N) buckets so one jitted executable serves many problem sizes.  The
+# padding is *exact*, not approximate, because of two properties of the sign
+# dynamics:
+#
+# * a zero-padded coupling row/column contributes 0 to every real
+#   oscillator's integer weighted sum, and
+# * a padded oscillator sees field 0, and ties keep the current spin
+#   (``sign_update``), so its phase never changes — it is settled from
+#   cycle 0 and cannot trigger the period-2 detector.
+#
+# Hence ``run``/``retrieve`` on (pad_config, pad_params, pad_sigma) return
+# bit-identical phases, settle cycles and settle/cycled flags on the first
+# ``n`` oscillators as the unpadded solve (asserted in tests/test_engine.py).
+
+
+def pad_config(cfg: ONNConfig, n_to: int) -> ONNConfig:
+    """The same config at a bucketed oscillator count ``n_to`` ≥ cfg.n."""
+    if n_to < cfg.n:
+        raise ValueError(f"pad_config: n_to={n_to} < cfg.n={cfg.n}")
+    return dataclasses.replace(cfg, n=n_to)
+
+
+def pad_params(cfg: ONNConfig, params: OnnParams, n_to: int) -> OnnParams:
+    """Zero-pad couplings and bias from (cfg.n, cfg.n) to (n_to, n_to).
+
+    Padded oscillators are uncoupled (zero row, zero column, zero bias), so
+    the dynamics of the first ``cfg.n`` oscillators are bit-exact with the
+    unpadded instance under any backend (integer sums gain only zeros).
+    """
+    if n_to < cfg.n:
+        raise ValueError(f"pad_params: n_to={n_to} < cfg.n={cfg.n}")
+    pad = n_to - cfg.n
+    if pad == 0:
+        return params
+    return OnnParams(
+        weights=jnp.pad(params.weights, ((0, pad), (0, pad))),
+        bias=jnp.pad(params.bias, (0, pad)),
+    )
+
+
+def pad_sigma(sigma: jax.Array, n_to: int, value: int = 1) -> jax.Array:
+    """Pad ±1 spin patterns (..., n) to (..., n_to) with constant spins.
+
+    The pad value only seeds the (uncoupled, field-0) padded oscillators; any
+    ±1 value leaves the real lanes untouched.
+    """
+    n = sigma.shape[-1]
+    if n_to < n:
+        raise ValueError(f"pad_sigma: n_to={n_to} < n={n}")
+    if n_to == n:
+        return sigma
+    widths = [(0, 0)] * (sigma.ndim - 1) + [(0, n_to - n)]
+    return jnp.pad(sigma, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
 # Weighted-sum backend dispatch (shared by functional and rtl modes)
 # ---------------------------------------------------------------------------
 

@@ -55,11 +55,11 @@ def _acc_width(n: int, weight_bits: int) -> int:
 # ---------------------------------------------------------------------------
 _RA_LUT_PER_ADDER_BIT = 2.7128  # adder-tree LUTs per result bit (endpoint: 49441@48)
 _RA_LUT_PER_OSC = 10.0  # mux + edge detector + counter per oscillator
-_RA_FF_PER_ADDER = 0.674  # pipeline/fanout FFs per adder (endpoint: 13906@48)
+_RA_FF_PER_ADDER = 0.71720  # pipeline/fanout FFs per adder (endpoint: 13906@48)
 
-_HA_LUT_CONTROL_PER_OSC = 27.5  # CDC sync, counters, result-hold (endpoint: 41547@506)
+_HA_LUT_CONTROL_PER_OSC = 27.5087  # CDC sync, counters, result-hold (endpoint: 41547@506)
 _HA_LUT_MUX_COEF = 2.2  # N:1 amplitude mux LUT6 tree incl. routing replication
-_HA_FF_CONTROL_PER_OSC = 48.4  # (endpoint: 44748@506)
+_HA_FF_CONTROL_PER_OSC = 34.4348  # (endpoint: 44748@506)
 _HA_MACS_PER_DSP = 2.3  # 5-bit SIMD packing in the 25×18 DSP48 (endpoint: 220@506)
 _HA_MACS_PER_BRAM = 3.62  # dual-port × packed reads (endpoint: 140@506)
 _HA_LOGIC_CLOCK_HZ = 50e6  # Table 5
@@ -117,8 +117,10 @@ def hybrid_resources(n: int, bits: BitConfig = BitConfig()) -> Dict[str, int]:
         + (acc + 1)  # result-hold register
         + _HA_FF_CONTROL_PER_OSC  # CDC synchronizers, control FSM
     )
-    dsp = math.ceil(n / _HA_MACS_PER_DSP)
-    bram_ports = math.ceil(n / _HA_MACS_PER_BRAM)
+    # The epsilon keeps an exact ratio (506 / 2.3 = 220) from rounding up a
+    # slice on float error — Table 4's 220 DSPs is the binding budget at 506.
+    dsp = math.ceil(n / _HA_MACS_PER_DSP - 1e-9)
+    bram_ports = math.ceil(n / _HA_MACS_PER_BRAM - 1e-9)
     bram_capacity = math.ceil(n * n * w / 36_864)  # BRAM36 = 36 kib
     bram = max(bram_ports, bram_capacity)
     return {"lut": int(round(lut)), "ff": int(round(ff)), "dsp": dsp, "bram": bram}
@@ -143,6 +145,19 @@ def oscillation_frequency(arch: str, n: int, bits: BitConfig = BitConfig()) -> f
         updates_per_period = 1 << bits.phase_bits
         return fmax / (updates_per_period * (n + _HA_SERIAL_OVERHEAD))
     raise ValueError(f"unknown architecture {arch!r}")
+
+
+def time_to_solution(
+    arch: str, n: int, cycles: float, bits: BitConfig = BitConfig()
+) -> float:
+    """Seconds the FPGA design needs for ``cycles`` oscillation cycles.
+
+    The paper's time-to-solution currency (Table 7 reports settle *cycles*;
+    wall time is cycles / f_osc).  ``repro.engine`` quotes this next to its
+    own software estimates so every served request carries the hardware
+    trade-study context (fast-but-small recurrent vs slow-but-large hybrid).
+    """
+    return cycles / oscillation_frequency(arch, n, bits)
 
 
 # Place-and-route stops short of 100 % LUT utilization (paper Table 4: the

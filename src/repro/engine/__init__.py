@@ -1,0 +1,36 @@
+"""repro.engine — async, shape-bucketed solver engine for all workloads.
+
+One surface replaces every ad-hoc serving loop::
+
+    from repro import engine
+
+    eng = engine.Engine(jax.random.PRNGKey(0))
+    eng.install("letters", "retrieval", xi=patterns)
+    fut = eng.submit(engine.Request("letters", corrupted_batch))
+    eng.drain()
+    result = fut.result()
+
+See :mod:`repro.engine.engine` for the engine itself,
+:mod:`repro.engine.bucketing` for the shape buckets,
+:mod:`repro.engine.planner` for the time-to-solution planner, and
+:mod:`repro.engine.adapters` for the built-in workloads.
+"""
+
+from repro.engine.bucketing import (  # noqa: F401
+    DEFAULT_BATCH_BUCKETS,
+    bucket_batch,
+    bucket_n,
+    chop,
+)
+from repro.engine.engine import Engine, EngineSolver, Request  # noqa: F401
+from repro.engine.planner import Estimate, Planner  # noqa: F401
+from repro.engine.registry import (  # noqa: F401
+    available_solvers,
+    register_solver,
+    solver_factory,
+)
+
+# Built-in workload registrations: "lm" lives in adapters; "retrieval" and
+# "maxcut" register from repro.api next to the Solver classes they wrap.
+from repro.engine import adapters  # noqa: E402,F401  (registers "lm")
+from repro import api as _api  # noqa: E402,F401  (registers "retrieval", "maxcut")

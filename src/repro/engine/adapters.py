@@ -1,0 +1,336 @@
+"""Engine adapters: retrieval, max-cut and LM decode behind one surface.
+
+Each adapter implements :class:`repro.engine.engine.EngineSolver`: it maps
+request payloads to shape buckets, packs lanes from many requests into one
+padded batch, and runs that batch through a single compiled executable.
+The adapters are registered with :mod:`repro.engine.registry` — retrieval
+and max-cut from ``repro.api`` (they wrap its ``Solver`` implementations),
+the LM decode loop here — so one ``Engine`` serves all three workloads
+concurrently.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dynamics
+from repro.core import hardware_model as hw
+from repro.core import ising as ising_lib
+from repro.engine import bucketing
+from repro.engine.registry import register_solver
+
+
+def _stack_keys(keys: List[jax.Array], pad_to: int) -> jax.Array:
+    """Stack per-lane keys, padding with further splits of the last key."""
+    if pad_to > len(keys):
+        keys = keys + list(jax.random.split(keys[-1], pad_to - len(keys)))
+    return jnp.stack(keys)
+
+
+# ---------------------------------------------------------------------------
+# Retrieval: batched associative memory (paper Fig. 7) on a fixed trained ONN
+# ---------------------------------------------------------------------------
+
+
+class RetrievalEngineSolver:
+    """Serves (B, N) corrupted-pattern batches on one trained coupling matrix.
+
+    Payload: ``(N,)`` or ``(B, N)`` ±1 spins.  Lanes from different requests
+    coalesce; the oscillator count is padded to the N bucket with masked
+    (zero-coupled) oscillators, which is bit-exact on the real lanes —
+    ``repro.core.dynamics.pad_params``.  Padded configs/params are cached
+    per bucket, so every request at a bucket reuses one ``retrieve``
+    executable per batch slab size.
+    """
+
+    def __init__(self, solver: Optional[Any] = None, xi: Any = None, **cfg_kwargs: Any):
+        from repro.api import RetrievalSolver  # local: api imports this module
+
+        if solver is None:
+            if xi is None:
+                raise ValueError("RetrievalEngineSolver needs solver= or xi=")
+            solver = RetrievalSolver.from_patterns(jnp.asarray(xi), **cfg_kwargs)
+        elif cfg_kwargs or xi is not None:
+            raise TypeError("pass either a built solver or xi= + config kwargs")
+        self.solver = solver
+        self._padded: Dict[int, Tuple[Any, Any]] = {}
+
+    @property
+    def config(self):
+        return self.solver.config
+
+    def lane_count(self, payload: Any) -> int:
+        arr = jnp.asarray(payload)
+        return 1 if arr.ndim == 1 else arr.shape[0]
+
+    def signature(self, payload: Any) -> Hashable:
+        arr = jnp.asarray(payload)
+        n = arr.shape[-1]
+        if n != self.config.n:
+            raise ValueError(f"payload N={n} != solver N={self.config.n}")
+        return n
+
+    def bucket(self, signature: int, n_policy: bucketing.NBucketPolicy) -> int:
+        return bucketing.bucket_n(signature, n_policy)
+
+    def _padded_instance(self, n_bucket: int):
+        if n_bucket not in self._padded:
+            cfg_b = dynamics.pad_config(self.config, n_bucket)
+            params_b = dynamics.pad_params(self.config, self.solver.params, n_bucket)
+            self._padded[n_bucket] = (cfg_b, params_b)
+        return self._padded[n_bucket]
+
+    def _draws_randomness(self) -> bool:
+        return self.config.mode == "rtl" and self.config.sync_jitter
+
+    def solve_bucket(
+        self,
+        bucket_sig: int,
+        payloads: List[Any],
+        keys: List[jax.Array],
+        batch_bucket: int,
+    ) -> List[Any]:
+        from repro import api  # local: api imports this module
+
+        cfg_b, params_b = self._padded_instance(bucket_sig)
+        lanes2d = [jnp.atleast_2d(jnp.asarray(p, jnp.int8)) for p in payloads]
+        counts = [x.shape[0] for x in lanes2d]
+        batch = dynamics.pad_sigma(jnp.concatenate(lanes2d, axis=0), bucket_sig)
+        total = batch.shape[0]
+        if total < batch_bucket:
+            pad_rows = jnp.ones((batch_bucket - total, bucket_sig), jnp.int8)
+            batch = jnp.concatenate([batch, pad_rows], axis=0)
+
+        lane_keys = None
+        if self._draws_randomness():
+            per_lane: List[jax.Array] = []
+            for k, c in zip(keys, counts):
+                per_lane.extend(jax.random.split(k, c))
+            lane_keys = _stack_keys(per_lane, batch_bucket)
+
+        res = api.retrieve(cfg_b, params_b, batch, lane_keys)
+        n = self.config.n
+        out: List[Any] = []
+        offset = 0
+        for p, c in zip(payloads, counts):
+            sl = slice(offset, offset + c)
+            r = dynamics.ONNResult(
+                final_phase=res.final_phase[sl, :n],
+                final_sigma=res.final_sigma[sl, :n],
+                settle_cycle=res.settle_cycle[sl],
+                settled=res.settled[sl],
+                cycled=res.cycled[sl],
+            )
+            if jnp.asarray(p).ndim == 1:  # single-lane payload → unbatched result
+                r = jax.tree.map(lambda x: x[0], r)
+            out.append(r)
+            offset += c
+        return out
+
+    def cost_units(self, bucket_sig: int, batch_bucket: int) -> float:
+        cfg = self.config
+        per_cycle = bucket_sig * bucket_sig
+        cycles = cfg.max_cycles * (cfg.clocks_per_cycle if cfg.mode == "rtl" else 1)
+        return float(batch_bucket) * per_cycle * cycles
+
+    def fpga_seconds(self, bucket_sig: int) -> Optional[float]:
+        # The paper hardware runs the *unpadded* instance; quote its design.
+        return hw.time_to_solution(
+            self.config.architecture,
+            self.config.n,
+            self.config.max_cycles,
+            hw.BitConfig(self.config.weight_bits, self.config.phase_bits),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Max-cut: oscillatory Ising machine (paper §2.2)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _batched_maxcut(sweeps: int, weight_bits: int):
+    """One jitted vmapped max-cut executable per (sweeps, bits) — cached so
+    repeated slabs of the same shape reuse the compile."""
+
+    def solve(adjs: jax.Array, keys: jax.Array):
+        return jax.vmap(
+            lambda a, k: ising_lib.solve_maxcut(
+                a, k, sweeps=sweeps, weight_bits=weight_bits
+            )
+        )(adjs, keys)
+
+    return jax.jit(solve)
+
+
+class MaxCutEngineSolver:
+    """Serves (N, N) adjacency matrices; one lane per request.
+
+    Instances are padded to the N bucket with isolated (zero-degree)
+    vertices: they never flip real spins (zero field keeps the spin) and
+    contribute nothing to the cut value, though the per-sweep random visit
+    order is drawn over the padded size, so a padded solve is a *valid*
+    anneal of the same instance rather than a bit-replay of the unpadded
+    one.  Requests with different true N coalesce inside one bucket.
+    """
+
+    def __init__(self, solver: Optional[Any] = None, sweeps: int = 64, weight_bits: int = 5):
+        if solver is not None:  # wrap an api.MaxCutSolver's settings
+            sweeps, weight_bits = solver.sweeps, solver.weight_bits
+        self.sweeps = int(sweeps)
+        self.weight_bits = int(weight_bits)
+
+    def lane_count(self, payload: Any) -> int:
+        return 1
+
+    def signature(self, payload: Any) -> Hashable:
+        arr = jnp.asarray(payload)
+        if arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
+            raise ValueError(f"max-cut payload must be square, got {arr.shape}")
+        return arr.shape[0]
+
+    def bucket(self, signature: int, n_policy: bucketing.NBucketPolicy) -> int:
+        return bucketing.bucket_n(signature, n_policy)
+
+    def solve_bucket(
+        self,
+        bucket_sig: int,
+        payloads: List[Any],
+        keys: List[jax.Array],
+        batch_bucket: int,
+    ) -> List[Any]:
+        nb = bucket_sig
+        padded = []
+        for p in payloads:
+            a = jnp.asarray(p)
+            pad = nb - a.shape[0]
+            padded.append(jnp.pad(a, ((0, pad), (0, pad))))
+        while len(padded) < batch_bucket:
+            padded.append(jnp.zeros((nb, nb), padded[0].dtype))
+        adjs = jnp.stack(padded)
+        res = _batched_maxcut(self.sweeps, self.weight_bits)(
+            adjs, _stack_keys(list(keys), batch_bucket)
+        )
+        out = []
+        for i, p in enumerate(payloads):
+            n = jnp.asarray(p).shape[0]
+            out.append(
+                ising_lib.MaxCutResult(
+                    sigma=res.sigma[i, :n],
+                    cut_value=res.cut_value[i],
+                    trace=res.trace[i],
+                )
+            )
+        return out
+
+    def cost_units(self, bucket_sig: int, batch_bucket: int) -> float:
+        return float(batch_bucket) * bucket_sig * bucket_sig * self.sweeps
+
+    def fpga_seconds(self, bucket_sig: int) -> Optional[float]:
+        # One async sweep ≈ one oscillation cycle of the (large-N) hybrid.
+        return hw.time_to_solution("hybrid", bucket_sig, self.sweeps)
+
+
+# ---------------------------------------------------------------------------
+# LM decode: the transformer/SSM serving loop as an engine workload
+# ---------------------------------------------------------------------------
+
+
+class LMEngineSolver:
+    """Serves prompt → greedy-decode requests for one model instance.
+
+    Payload: ``{"tokens": (L,) or (B, L) int32, "max_new_tokens": int}``
+    plus optional ``"vision"`` / ``"frames"`` arrays for VLM/enc-dec
+    families.  Buckets are (prompt_len, max_new_tokens[, extras]); lanes
+    coalesce along batch, padded lanes decode zero prompts whose outputs are
+    dropped (batch rows are independent, so real lanes are unaffected).
+    PRNG: the construction key (params init) and per-slab cache key are
+    explicit engine-split keys — no hidden ``PRNGKey(0)``.
+    """
+
+    def __init__(self, arch: str, key: jax.Array, reduced: bool = True):
+        from repro import configs
+        from repro.models import params as PM
+        from repro.models import steps as steps_lib
+        from repro.models.model import get_model
+
+        self.arch = arch
+        self.cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
+        self.model = get_model(self.cfg)
+        k_params, self._cache_key = jax.random.split(jnp.asarray(key))
+        self.params = PM.materialize(self.model.param_specs, k_params)
+        self._generate = steps_lib.make_generate(self.model)
+        self.last_timing: Dict[str, float] = {}
+        #: Per-slab timings since construction (a drain may run many slabs).
+        self.timings: List[Dict[str, float]] = []
+
+    def lane_count(self, payload: Dict[str, Any]) -> int:
+        toks = jnp.asarray(payload["tokens"])
+        return 1 if toks.ndim == 1 else toks.shape[0]
+
+    def signature(self, payload: Dict[str, Any]) -> Hashable:
+        toks = jnp.asarray(payload["tokens"])
+        extras = tuple(sorted(k for k in payload if k not in ("tokens", "max_new_tokens")))
+        return (toks.shape[-1], int(payload["max_new_tokens"]), extras)
+
+    def bucket(self, signature: Hashable, n_policy: bucketing.NBucketPolicy) -> Hashable:
+        return signature  # prompts are not length-padded (no attention mask yet)
+
+    def solve_bucket(
+        self,
+        bucket_sig: Hashable,
+        payloads: List[Dict[str, Any]],
+        keys: List[jax.Array],
+        batch_bucket: int,
+    ) -> List[Any]:
+        prompt_len, max_new, extras = bucket_sig
+        lanes = [jnp.atleast_2d(jnp.asarray(p["tokens"], jnp.int32)) for p in payloads]
+        counts = [x.shape[0] for x in lanes]
+        tokens = jnp.concatenate(lanes, axis=0)
+        total = tokens.shape[0]
+        if total < batch_bucket:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((batch_bucket - total, prompt_len), jnp.int32)]
+            )
+        batch_in: Dict[str, Any] = {"tokens": tokens}
+        for name in extras:
+            arrs = []
+            for p in payloads:
+                a = jnp.asarray(p[name])
+                one = jnp.asarray(p["tokens"]).ndim == 1
+                arrs.append(a[None] if one else a)
+            extra = jnp.concatenate(arrs, axis=0)
+            if total < batch_bucket:
+                pad_shape = (batch_bucket - total,) + extra.shape[1:]
+                extra = jnp.concatenate([extra, jnp.zeros(pad_shape, extra.dtype)])
+            batch_in[name] = extra
+
+        self._cache_key, ck = jax.random.split(self._cache_key)
+        out_tokens, self.last_timing = self._generate(self.params, batch_in, max_new, ck)
+        self.timings.append(self.last_timing)
+
+        results = []
+        offset = 0
+        for p, c in zip(payloads, counts):
+            rows = out_tokens[offset : offset + c]
+            if jnp.asarray(p["tokens"]).ndim == 1:
+                rows = rows[0]
+            results.append(rows)
+            offset += c
+        return results
+
+    def cost_units(self, bucket_sig: Hashable, batch_bucket: int) -> float:
+        prompt_len, max_new, _ = bucket_sig
+        # prefill is O(L · d²· layers); each decode step O(d² · layers).
+        per_tok = self.cfg.n_layers * self.cfg.d_model * self.cfg.d_model
+        return float(batch_bucket) * (prompt_len + max_new) * per_tok
+
+    def fpga_seconds(self, bucket_sig: Hashable) -> Optional[float]:
+        return None  # no ONN mapping for the LM workload
+
+
+register_solver("lm", LMEngineSolver, "greedy LM decode loop (prefill + serve steps)")

@@ -1,0 +1,346 @@
+"""The serving engine: ``submit(request) -> Future``, ``drain()``, ``stats()``.
+
+One ``Engine`` owns a set of installed solver instances (built from the
+:mod:`repro.engine.registry` catalog), a pending-request queue per
+(instance, shape bucket), a PRNG key that is split once per request, and a
+:class:`repro.engine.planner.Planner` that chops queues into batch slabs
+and quotes latencies.
+
+Lifecycle::
+
+    eng = Engine(jax.random.PRNGKey(0))
+    eng.install("letters", "retrieval", xi=patterns)      # registry factory
+    eng.install("cuts", "maxcut", sweeps=64)
+    futs = [eng.submit(Request("letters", corrupted)) for corrupted in stream]
+    eng.drain()                                           # batch + execute
+    results = [f.result() for f in futs]
+
+Compile-once invariant: every request is padded to a (batch, N) bucket
+(:mod:`repro.engine.bucketing`), so a stream of mixed-size requests traces
+at most once per (solver config, bucket) — the request-path extension of
+the core API's "params are traced, config is static" rule.  Padded lanes
+are masked (zero couplings / dead batch rows) and never affect results;
+see ``repro.core.dynamics.pad_params`` for the bit-exactness argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Any, Dict, Hashable, List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+
+from repro.engine import bucketing
+from repro.engine import registry as registry_lib
+from repro.engine.planner import Estimate, Planner
+
+
+@runtime_checkable
+class EngineSolver(Protocol):
+    """What the engine needs from a servable workload adapter.
+
+    Implementations batch *lanes*: a request payload carries one or more
+    independent problem lanes (rows of a retrieval batch, one max-cut
+    instance, one LM prompt); the engine coalesces lanes from many requests
+    into one padded slab and the adapter runs it through a single compiled
+    executable, returning one result per request.
+    """
+
+    def lane_count(self, payload: Any) -> int:
+        """Independent lanes in this payload (≥ 1)."""
+        ...
+
+    def signature(self, payload: Any) -> Hashable:
+        """Natural shape signature of the payload (pre-bucketing)."""
+        ...
+
+    def bucket(self, signature: Hashable, n_policy: bucketing.NBucketPolicy) -> Hashable:
+        """Padded shape signature this payload is served at."""
+        ...
+
+    def solve_bucket(
+        self,
+        bucket_sig: Hashable,
+        payloads: List[Any],
+        keys: List[jax.Array],
+        batch_bucket: int,
+    ) -> List[Any]:
+        """Serve ``payloads`` (Σ lanes ≤ batch_bucket) in one padded batch."""
+        ...
+
+    def cost_units(self, bucket_sig: Hashable, batch_bucket: int) -> float:
+        """Abstract work units of one slab (for cold-start latency quotes)."""
+        ...
+
+    def fpga_seconds(self, bucket_sig: Hashable) -> Optional[float]:
+        """Paper-hardware time-to-solution context, if the workload maps."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One unit of submitted work.
+
+    ``workload`` names an *installed* solver instance; ``payload`` is
+    workload-specific; ``key`` optionally overrides the engine's per-request
+    key split (pass one for reproducible randomized solves).
+    """
+
+    workload: str
+    payload: Any
+    key: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class _Pending:
+    request: Request
+    future: Future
+    lanes: int
+    key: jax.Array
+    estimate: Estimate
+
+
+class Engine:
+    """Async, shape-bucketed solver engine over the registered workloads.
+
+    Parameters
+    ----------
+    key:
+        Engine PRNG root.  Split once per submitted request (explicitly —
+        there is no hidden default key anywhere on the serving path).
+    batch_buckets:
+        Allowed batch-slab sizes (sorted ascending).  A stream of requests
+        with batch ∈ {1..8} compiles at most ``len(batch_buckets)``
+        executables per (config, N bucket) instead of eight.
+    n_policy:
+        Oscillator-count bucketing: ``"pow2"`` (default), ``"exact"``, or an
+        explicit tuple of sizes.  See :mod:`repro.engine.bucketing`.
+    coalesce:
+        Pack lanes from different requests into shared slabs (throughput).
+        ``False`` serves each request in its own (padded) slab — the
+        latency-first policy the benchmark compares against.
+    auto_flush:
+        Execute a bucket's queue from ``submit`` as soon as its pending
+        lanes fill the largest batch bucket, bounding queue memory.
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        *,
+        batch_buckets: Tuple[int, ...] = bucketing.DEFAULT_BATCH_BUCKETS,
+        n_policy: bucketing.NBucketPolicy = "pow2",
+        coalesce: bool = True,
+        auto_flush: bool = False,
+        ema_alpha: float = 0.3,
+    ) -> None:
+        self._key = key
+        self.batch_buckets = tuple(sorted(batch_buckets))
+        self.n_policy = n_policy
+        self.coalesce = coalesce
+        self.auto_flush = auto_flush
+        self.planner = Planner(self.batch_buckets, ema_alpha=ema_alpha)
+        self._solvers: Dict[str, EngineSolver] = {}
+        self._queues: Dict[Tuple[str, Hashable], List[_Pending]] = {}
+        self._counts = {
+            "submitted": 0,
+            "completed": 0,
+            "failed": 0,
+            "slabs": 0,
+            "lanes_served": 0,
+            "lanes_padding": 0,
+        }
+        self._bucket_log: Dict[Tuple[str, Hashable, int], int] = {}
+
+    # -- installation ------------------------------------------------------
+
+    def install(self, name: str, solver: Any = None, **kwargs: Any) -> EngineSolver:
+        """Install a solver instance under ``name``.
+
+        ``solver`` is a registry workload name (``"retrieval"``,
+        ``"maxcut"``, ``"lm"``, …) whose factory receives ``kwargs``, or an
+        already-built :class:`EngineSolver`.  Defaults to ``name`` itself,
+        so ``install("maxcut", sweeps=64)`` works for the common case.
+        """
+        if name in self._solvers:
+            raise ValueError(f"solver instance {name!r} already installed")
+        if solver is None:
+            solver = name
+        if isinstance(solver, str):
+            solver = registry_lib.solver_factory(solver)(**kwargs)
+        elif kwargs:
+            raise TypeError("kwargs only apply when building from the registry")
+        if not isinstance(solver, EngineSolver):
+            raise TypeError(f"{solver!r} does not implement EngineSolver")
+        self._solvers[name] = solver
+        return solver
+
+    def solver(self, name: str) -> EngineSolver:
+        try:
+            return self._solvers[name]
+        except KeyError:
+            known = ", ".join(sorted(self._solvers)) or "<none>"
+            raise KeyError(f"no installed solver {name!r} (installed: {known})") from None
+
+    # -- submission --------------------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def submit(self, request: Request) -> "Future[Any]":
+        """Enqueue one request; returns a Future resolved at drain/flush.
+
+        The request is assigned its own PRNG subkey (engine key split) and a
+        latency estimate (readable via :meth:`stats` while pending).
+        """
+        solver = self.solver(request.workload)
+        lanes = solver.lane_count(request.payload)
+        if lanes > self.batch_buckets[-1]:
+            raise ValueError(
+                f"request has {lanes} lanes > largest batch bucket "
+                f"{self.batch_buckets[-1]}; split it or widen batch_buckets"
+            )
+        sig = solver.signature(request.payload)
+        bucket_sig = solver.bucket(sig, self.n_policy)
+        qkey = (request.workload, bucket_sig)
+        bb = bucketing.bucket_batch(lanes, self.batch_buckets)
+        est = self.planner.estimate(
+            (request.workload, bucket_sig, bb),
+            units=solver.cost_units(bucket_sig, bb),
+            fpga_seconds=solver.fpga_seconds(bucket_sig),
+        )
+        pending = _Pending(
+            request=request,
+            future=Future(),
+            lanes=lanes,
+            key=request.key if request.key is not None else self._next_key(),
+            estimate=est,
+        )
+        self._queues.setdefault(qkey, []).append(pending)
+        self._counts["submitted"] += 1
+        if self.auto_flush:
+            if sum(p.lanes for p in self._queues[qkey]) >= self.batch_buckets[-1]:
+                self._flush_queue(qkey)
+        return pending.future
+
+    # -- execution ---------------------------------------------------------
+
+    def _pack(self, pendings: List[_Pending]) -> List[List[_Pending]]:
+        """FIFO-pack pending requests into slabs of ≤ max batch bucket."""
+        if not self.coalesce:
+            return [[p] for p in pendings]
+        cap = self.batch_buckets[-1]
+        slabs: List[List[_Pending]] = []
+        cur: List[_Pending] = []
+        cur_lanes = 0
+        for p in pendings:
+            if cur and cur_lanes + p.lanes > cap:
+                slabs.append(cur)
+                cur, cur_lanes = [], 0
+            cur.append(p)
+            cur_lanes += p.lanes
+        if cur:
+            slabs.append(cur)
+        return slabs
+
+    def _run_slab(
+        self, workload: str, bucket_sig: Hashable, slab: List[_Pending]
+    ) -> None:
+        solver = self._solvers[workload]
+        lanes = sum(p.lanes for p in slab)
+        bb = bucketing.bucket_batch(lanes, self.batch_buckets)
+        t0 = time.perf_counter()
+        try:
+            results = solver.solve_bucket(
+                bucket_sig, [p.request.payload for p in slab], [p.key for p in slab], bb
+            )
+        except Exception as exc:  # noqa: BLE001 — propagate through futures
+            for p in slab:
+                p.future.set_exception(exc)
+            self._counts["failed"] += len(slab)
+            return
+        seconds = time.perf_counter() - t0
+        if len(results) != len(slab):
+            exc = RuntimeError(
+                f"{workload}: solve_bucket returned {len(results)} results "
+                f"for {len(slab)} requests"
+            )
+            for p in slab:
+                p.future.set_exception(exc)
+            self._counts["failed"] += len(slab)
+            return
+        self.planner.observe(
+            (workload, bucket_sig, bb),
+            seconds,
+            units=solver.cost_units(bucket_sig, bb),
+        )
+        for p, r in zip(slab, results):
+            p.future.set_result(r)
+        self._counts["completed"] += len(slab)
+        self._counts["slabs"] += 1
+        self._counts["lanes_served"] += bb
+        self._counts["lanes_padding"] += bb - lanes
+        lkey = (workload, bucket_sig, bb)
+        self._bucket_log[lkey] = self._bucket_log.get(lkey, 0) + 1
+
+    def _flush_queue(self, qkey: Tuple[str, Hashable]) -> int:
+        pendings = self._queues.pop(qkey, [])
+        if not pendings:
+            return 0
+        workload, bucket_sig = qkey
+        for slab in self._pack(pendings):
+            self._run_slab(workload, bucket_sig, slab)
+        return len(pendings)
+
+    def flush(self, workload: Optional[str] = None) -> int:
+        """Execute pending queues (optionally only one workload's); returns
+        the number of requests served."""
+        served = 0
+        for qkey in list(self._queues):
+            if workload is None or qkey[0] == workload:
+                served += self._flush_queue(qkey)
+        return served
+
+    def drain(self) -> Dict[str, Any]:
+        """Serve everything pending; returns :meth:`stats` afterwards."""
+        self.flush()
+        return self.stats()
+
+    # -- introspection -----------------------------------------------------
+
+    def estimate(self, workload: str, payload: Any) -> Estimate:
+        """Latency quote for a hypothetical request (nothing enqueued)."""
+        solver = self.solver(workload)
+        bucket_sig = solver.bucket(solver.signature(payload), self.n_policy)
+        bb = bucketing.bucket_batch(solver.lane_count(payload), self.batch_buckets)
+        return self.planner.estimate(
+            (workload, bucket_sig, bb),
+            units=solver.cost_units(bucket_sig, bb),
+            fpga_seconds=solver.fpga_seconds(bucket_sig),
+        )
+
+    def stats(self) -> Dict[str, Any]:
+        served = self._counts["lanes_served"]
+        pending = {
+            f"{w}:{b!r}": {
+                "requests": len(ps),
+                "lanes": sum(p.lanes for p in ps),
+                "estimate_s": [round(p.estimate.seconds, 6) for p in ps],
+            }
+            for (w, b), ps in self._queues.items()
+            if ps
+        }
+        return {
+            **self._counts,
+            "pad_fraction": 0.0 if served == 0 else self._counts["lanes_padding"] / served,
+            "installed": sorted(self._solvers),
+            "pending": pending,
+            "slabs_per_bucket": {
+                f"{w}:{b!r}:batch{bb}": c
+                for (w, b, bb), c in sorted(self._bucket_log.items(), key=repr)
+            },
+            "planner": self.planner.snapshot(),
+        }

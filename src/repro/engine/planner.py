@@ -1,0 +1,113 @@
+"""Time-to-solution planner: pick bucket slabs, quote latencies.
+
+The paper's central trade is time-to-solution vs. resources: the recurrent
+design is fast per cycle but caps at 48 oscillators; the hybrid serializes
+the MAC to reach 506 at ~100× lower oscillation frequency (Figs 11–12).
+The serving engine faces the same trade per drain: a big batch slab
+amortizes dispatch overhead (throughput) but pads more lanes; a small slab
+answers sooner (latency).  This planner makes that choice measurable:
+
+* **EMA latencies** — every executed slab updates an exponential moving
+  average of wall seconds per (instance, bucket) key; warm estimates come
+  from here.
+* **Model-based cold start** — before a bucket has ever run, its cost is
+  the solver's abstract unit count (e.g. lanes · N² · cycles for an ONN
+  retrieve) converted to seconds through a globally fitted cost rate, so
+  even the first request gets a quote of the right order.
+* **FPGA context** — estimates carry ``fpga_seconds`` from
+  ``core.hardware_model.time_to_solution`` when the workload maps onto the
+  paper's designs, putting every software latency next to the hardware it
+  models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, Optional, Sequence, Tuple
+
+from repro.engine import bucketing
+
+#: Cold-start cost rate (seconds per abstract unit) before any measurement:
+#: the order of one fused int8 MAC on a CPU core.  The first observation
+#: replaces it, so it only shapes the very first quote.
+DEFAULT_COST_RATE = 2e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Estimate:
+    """A per-request (or per-slab) latency quote."""
+
+    seconds: float
+    source: str  # "ema" (measured) | "model" (cost-rate cold start)
+    fpga_seconds: Optional[float] = None  # paper-hardware time-to-solution
+
+
+class Planner:
+    """Bucket-slab planner with per-bucket EMA latencies.
+
+    One planner per engine; keys are whatever the engine uses to identify a
+    compiled shape — (instance, bucket signature, batch bucket).
+    """
+
+    def __init__(
+        self,
+        batch_buckets: Sequence[int] = bucketing.DEFAULT_BATCH_BUCKETS,
+        ema_alpha: float = 0.3,
+    ) -> None:
+        if not 0.0 < ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha={ema_alpha} outside (0, 1]")
+        self.batch_buckets = tuple(sorted(batch_buckets))
+        self.ema_alpha = ema_alpha
+        self._ema_s: Dict[Hashable, float] = {}
+        self._cost_rate = DEFAULT_COST_RATE
+        self._rate_fitted = False
+
+    # -- planning ----------------------------------------------------------
+
+    def plan(self, lanes: int) -> Tuple[int, ...]:
+        """Chop ``lanes`` pending lanes into batch-bucket slabs."""
+        return bucketing.chop(lanes, self.batch_buckets)
+
+    # -- measurement -------------------------------------------------------
+
+    def observe(self, key: Hashable, seconds: float, units: float = 0.0) -> None:
+        """Record a measured slab execution (and refit the cost rate).
+
+        The first observation of a key is compile-dominated (jit traces on
+        first execution), so it seeds that key's EMA but is excluded from
+        the global cost-rate fit — cold-start quotes for *other* shapes
+        should reflect steady-state execution, not tracing.
+        """
+        prev = self._ema_s.get(key)
+        a = self.ema_alpha
+        self._ema_s[key] = seconds if prev is None else (1 - a) * prev + a * seconds
+        if prev is not None and units > 0 and seconds > 0:
+            rate = seconds / units
+            if not self._rate_fitted:
+                self._cost_rate, self._rate_fitted = rate, True
+            else:
+                self._cost_rate = (1 - a) * self._cost_rate + a * rate
+
+    # -- quoting -----------------------------------------------------------
+
+    def estimate(
+        self,
+        key: Hashable,
+        units: float = 0.0,
+        fpga_seconds: Optional[float] = None,
+    ) -> Estimate:
+        """Latency quote for one slab at ``key``: EMA if measured, else model."""
+        ema = self._ema_s.get(key)
+        if ema is not None:
+            return Estimate(seconds=ema, source="ema", fpga_seconds=fpga_seconds)
+        return Estimate(
+            seconds=units * self._cost_rate, source="model", fpga_seconds=fpga_seconds
+        )
+
+    def snapshot(self) -> Dict[str, object]:
+        """Planner state for ``Engine.stats()``."""
+        return {
+            "cost_rate_s_per_unit": self._cost_rate,
+            "cost_rate_fitted": self._rate_fitted,
+            "ema_seconds": {repr(k): v for k, v in self._ema_s.items()},
+        }

@@ -36,6 +36,35 @@ DEFAULT_BLOCK_I = 128
 DEFAULT_BLOCK_K = 128
 
 
+def pad_to_blocks(x: jax.Array, multiples, value=0) -> jax.Array:
+    """Zero-pad each axis of ``x`` up to the next multiple of ``multiples``.
+
+    ``multiples`` is one int per axis (0/1 → leave the axis alone).  This is
+    the same treatment the serial backend gives N not divisible by its chunk:
+    padded rows/columns carry zeros, which contribute nothing to the integer
+    sums, so callers can slice the result back to the original extent.  The
+    ``*_pallas`` entry points below require pre-padded shapes and point here
+    when they reject a ragged one.
+    """
+    if len(multiples) != x.ndim:
+        raise ValueError(
+            f"pad_to_blocks: {len(multiples)} multiples for {x.ndim}-d input"
+        )
+    widths = []
+    for size, m in zip(x.shape, multiples):
+        pad = 0 if m in (0, 1) else (-size) % m
+        widths.append((0, pad))
+    if not any(w for _, w in widths):
+        return x
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _require(ok: bool, msg: str) -> None:
+    """Shape-contract check that survives ``python -O`` (unlike assert)."""
+    if not ok:
+        raise ValueError(msg)
+
+
 def vmem_bytes(bb: int, bi: int, bk: int, fused: bool = True) -> int:
     """VMEM working-set estimate for one grid step (for block-size tuning)."""
     sig = bb * bk  # int8
@@ -80,7 +109,12 @@ def coupling_sum_pallas(
     """S[b,i] = Σ_j W[i,j] σ[b,j].  Shapes must be pre-padded to block multiples."""
     b, n = sigma.shape
     ni, nk = w.shape
-    assert n == nk and b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0
+    _require(n == nk, f"coupling_sum_pallas: sigma N={n} != weights N={nk}")
+    _require(
+        b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0,
+        f"coupling_sum_pallas: shapes (b={b}, ni={ni}, nk={nk}) not multiples "
+        f"of blocks ({block_b}, {block_i}, {block_k}); pad with pad_to_blocks",
+    )
     grid = (ni // block_i, b // block_b, nk // block_k)
     return pl.pallas_call(
         _coupling_sum_kernel,
@@ -137,7 +171,16 @@ def onn_step_pallas(
     """Fused σ' = sign-align(W σ + h); ties keep the current spin."""
     b, n = sigma.shape
     ni, nk = w.shape
-    assert n == nk and b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0
+    _require(n == nk, f"onn_step_pallas: sigma N={n} != weights N={nk}")
+    _require(
+        bias.shape == (ni,),
+        f"onn_step_pallas: bias {bias.shape} != ({ni},)",
+    )
+    _require(
+        b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0,
+        f"onn_step_pallas: shapes (b={b}, ni={ni}, nk={nk}) not multiples "
+        f"of blocks ({block_b}, {block_i}, {block_k}); pad with pad_to_blocks",
+    )
     grid = (ni // block_i, b // block_b, nk // block_k)
     bias2d = bias.reshape(1, -1)
     return pl.pallas_call(
@@ -196,7 +239,13 @@ def quantized_matvec_pallas(
     """y[b,m] = Σ_k x[b,k] W_q[m,k] · scale[m]  (f32 out)."""
     b, kdim = x.shape
     m, kw = w_q.shape
-    assert kdim == kw and b % block_b == 0 and m % block_m == 0 and kdim % block_k == 0
+    _require(kdim == kw, f"quantized_matvec_pallas: x K={kdim} != weights K={kw}")
+    _require(
+        b % block_b == 0 and m % block_m == 0 and kdim % block_k == 0,
+        f"quantized_matvec_pallas: shapes (b={b}, m={m}, k={kdim}) not "
+        f"multiples of blocks ({block_b}, {block_m}, {block_k}); pad with "
+        "pad_to_blocks",
+    )
     grid = (m // block_m, b // block_b, kdim // block_k)
     scale2d = scale.reshape(1, -1)
     return pl.pallas_call(

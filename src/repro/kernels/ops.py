@@ -21,16 +21,6 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def _pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
 def _pick_block(size: int, preferred: int, minimum: int = 8) -> int:
     """Largest power-of-two block ≤ preferred that keeps padding small."""
     b = preferred
@@ -60,8 +50,8 @@ def coupling_sum(
         bb = _pick_block(sig2d.shape[0], block_b)
         bi = _pick_block(n, block_i)
         bk = _pick_block(n, block_k)
-        sig_p = _pad_to(_pad_to(sig2d, 0, bb), 1, bk)
-        w_p = _pad_to(_pad_to(w.astype(jnp.int8), 0, bi), 1, bk)
+        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
         out = _k.coupling_sum_pallas(
             sig_p, w_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
         )[: sig2d.shape[0], :n]
@@ -91,9 +81,9 @@ def onn_step(
         bb = _pick_block(sig2d.shape[0], block_b)
         bi = _pick_block(n, block_i)
         bk = _pick_block(n, block_k)
-        sig_p = _pad_to(_pad_to(sig2d, 0, bb), 1, bk)
-        w_p = _pad_to(_pad_to(w.astype(jnp.int8), 0, bi), 1, bk)
-        h_p = _pad_to(h, 0, bi)
+        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
+        h_p = _k.pad_to_blocks(h, (bi,))
         out = _k.onn_step_pallas(
             sig_p, w_p, h_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
         )[: sig2d.shape[0], :n]
@@ -123,9 +113,9 @@ def quantized_matvec(
         bb = _pick_block(x2d.shape[0], block_b)
         bm = _pick_block(m, block_m)
         bk = _pick_block(kdim, block_k, minimum=128)
-        x_p = _pad_to(_pad_to(x2d, 0, bb), 1, bk)
-        w_p = _pad_to(_pad_to(w_q.astype(jnp.int8), 0, bm), 1, bk)
-        s_p = _pad_to(scale_full, 0, bm)
+        x_p = _k.pad_to_blocks(x2d, (bb, bk))
+        w_p = _k.pad_to_blocks(w_q.astype(jnp.int8), (bm, bk))
+        s_p = _k.pad_to_blocks(scale_full, (bm,))
         out = _k.quantized_matvec_pallas(
             x_p, w_p, s_p, block_b=bb, block_m=bm, block_k=bk, interpret=_interpret()
         )[: x2d.shape[0], :m]

@@ -1,15 +1,16 @@
-"""ONN pattern-retrieval service: the paper's task as a batched server.
+"""ONN pattern-retrieval CLI: a thin adapter over the ``repro.engine`` engine.
 
 Loads (or trains, via Diederich–Opper I) coupling weights for a letter
-dataset into a ``repro.api.RetrievalSolver``, then serves batches of
-corrupted patterns: each request batch is evolved to steady state on the ONN
-and the retrieved patterns + settle statistics are returned.  This is the
-FPGA demo of paper Fig. 7 as a production serving loop — and the end-to-end
-driver for the ONN side.
+dataset into a ``repro.api.RetrievalSolver``, installs it on a serving
+engine, and submits each corrupted pattern as one request.  The engine
+coalesces request lanes into shape-bucketed slabs — every (N bucket, batch
+bucket) compiles once, padded lanes are masked and bit-exact with unpadded
+solves — and the drained results are aggregated into the paper's Fig. 7
+accuracy/settle statistics.
 
 Because the solver is the functional pytree API (weights traced, config
 static), re-training or hot-swapping the weight matrix does NOT recompile
-the serving executable: any same-N solver reuses the first compile.
+the serving executable: any same-bucket solver reuses the first compile.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.retrieve --dataset 10x10 \
@@ -28,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.api import RetrievalSolver
 from repro.data import patterns as pat
+from repro.engine import DEFAULT_BATCH_BUCKETS, Engine, Request
 
 
 def build_solver(
@@ -59,35 +61,55 @@ def serve_requests(
     corruption: float,
     n_requests: int,
     seed: int = 0,
+    *,
+    batch_buckets: Tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
+    n_policy: Any = "pow2",
+    coalesce: bool = True,
 ) -> Dict[str, Any]:
     p, n = xi.shape
     key = jax.random.PRNGKey(seed)
-    k1, k2, k3 = jax.random.split(key, 3)
+    k1, k2, k_engine = jax.random.split(key, 3)
     which = jax.random.randint(k1, (n_requests,), 0, p)
     targets = xi[which]
     ckeys = jax.random.split(k2, n_requests)
     corrupted = jax.vmap(lambda t, k: pat.corrupt(t, k, corruption))(targets, ckeys)
 
-    t0 = time.time()
-    result = solver.solve(corrupted, k3)  # one key, split per request
-    jax.block_until_ready(result.final_sigma)
-    dt = time.time() - t0
+    eng = Engine(
+        k_engine, batch_buckets=batch_buckets, n_policy=n_policy, coalesce=coalesce
+    )
+    eng.install("retrieval", solver.as_engine_solver())
+
+    t0 = time.perf_counter()
+    futures = [
+        eng.submit(Request("retrieval", corrupted[i])) for i in range(n_requests)
+    ]
+    stats = eng.drain()
+    sigma = jnp.stack([f.result().final_sigma for f in futures])
+    settle_cycle = jnp.stack([f.result().settle_cycle for f in futures])
+    settled = jnp.stack([f.result().settled for f in futures])
+    jax.block_until_ready(sigma)
+    dt = time.perf_counter() - t0
 
     # Phase patterns are defined up to a global flip (spin symmetry).
-    out = result.final_sigma.astype(jnp.int32)
+    out = sigma.astype(jnp.int32)
     match = jnp.all(out == targets, axis=1) | jnp.all(out == -targets, axis=1)
     acc = float(jnp.mean(match.astype(jnp.float32)))
     max_cycles = solver.config.max_cycles
-    settle = float(jnp.mean(jnp.where(result.settled, result.settle_cycle, max_cycles)))
+    settle = float(jnp.mean(jnp.where(settled, settle_cycle, max_cycles)))
     return {
         "n_oscillators": n,
         "requests": n_requests,
         "corruption": corruption,
         "accuracy": acc,
         "mean_settle_cycles": round(settle, 2),
-        "timeouts": int(jnp.sum(~result.settled)),
+        "timeouts": int(jnp.sum(~settled)),
         "wall_s": round(dt, 3),
         "requests_per_s": round(n_requests / max(dt, 1e-9), 1),
+        "engine": {
+            "slabs": stats["slabs"],
+            "pad_fraction": round(stats["pad_fraction"], 3),
+            "slabs_per_bucket": stats["slabs_per_bucket"],
+        },
     }
 
 
@@ -103,13 +125,26 @@ def main() -> None:
                     help="weighted-sum schedule for the coupling sum")
     ap.add_argument("--use-kernel", action="store_true",
                     help="deprecated alias for --backend pallas")
+    ap.add_argument("--n-policy", default="pow2",
+                    help='engine N bucketing: "pow2", "exact", or comma sizes')
+    ap.add_argument("--max-batch", type=int, default=max(DEFAULT_BATCH_BUCKETS),
+                    help="largest engine batch bucket")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="serve each request in its own slab (latency-first)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     backend = "pallas" if args.use_kernel else args.backend
     solver, xi = build_solver(
         args.dataset, args.architecture, args.mode, backend=backend
     )
-    print(json.dumps(serve_requests(solver, xi, args.corruption, args.requests, args.seed), indent=1))
+    policy: Any = args.n_policy
+    if policy not in ("pow2", "exact"):
+        policy = tuple(int(s) for s in policy.split(","))
+    buckets = tuple(b for b in DEFAULT_BATCH_BUCKETS if b <= args.max_batch) or (1,)
+    print(json.dumps(serve_requests(
+        solver, xi, args.corruption, args.requests, args.seed,
+        batch_buckets=buckets, n_policy=policy, coalesce=not args.no_coalesce,
+    ), indent=1))
 
 
 if __name__ == "__main__":

@@ -1,13 +1,20 @@
-"""Batched LM serving loop: prefill + decode with a continuous token budget.
+"""LM serving CLI: a thin adapter over the ``repro.engine`` serving engine.
 
-Serves a (reduced-config) model: a batch of prompts is prefilled once, then
-decoded token-by-token with the KV/state cache donated between steps.  On a
-real pod the same functions run under the production mesh; here they run on
-CPU for the examples and tests.
+Each prompt is submitted as one engine request; the engine coalesces the
+lanes into a batch-bucket slab and the ``lm`` adapter runs prefill + the
+token-by-token decode loop (``repro.models.steps.make_generate``) with the
+KV/state cache donated between steps.  Swapping checkpoints of the same
+shape never recompiles (params are traced); a stream of same-shape requests
+compiles exactly one prefill and one decode executable per bucket.
 
-Like the ONN side (``repro.launch.retrieve`` / ``repro.api.Solver``), this
-loop is functional: params are a traced pytree fed to jitted pure step
-functions, so swapping checkpoints of the same shape never recompiles.
+PRNG is explicit end to end: one seed key is split once per use (model
+init, prompts, vision, frames, engine root) and the engine splits one
+subkey per request — there is no hidden ``PRNGKey(0)`` anywhere on this
+path.
+
+Token accounting (see ``make_generate``): the returned stream always holds
+exactly ``max_new_tokens`` tokens — token 0 from the prefill logits, token
+i from the i-th decode step.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --tokens 32
@@ -18,16 +25,14 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.models import params as PM
-from repro.models import steps as steps_lib
-from repro.models.model import get_model
+from repro.engine import Engine, Request
 
 
 def serve(
@@ -39,65 +44,66 @@ def serve(
     max_new_tokens: int = 16,
     seed: int = 0,
 ) -> Dict[str, Any]:
-    cfg = configs.get_reduced(arch) if reduced else configs.get_config(arch)
-    model = get_model(cfg)
     key = jax.random.PRNGKey(seed)
-    params = PM.materialize(model.param_specs, key)
+    k_model, k_prompts, k_vision, k_frames, k_engine = jax.random.split(key, 5)
 
-    prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab, dtype=jnp.int32)
-    batch_in: Dict[str, Any] = {"tokens": prompts}
-    if cfg.family == "vlm":
-        batch_in["vision"] = jax.random.normal(
-            key, (batch, cfg.n_vision_tokens, cfg.vision_dim), jnp.bfloat16
+    eng = Engine(k_engine)
+    lm = eng.install("lm", arch=arch, key=k_model, reduced=reduced)
+    cfg = lm.cfg
+
+    prompts = jax.random.randint(
+        k_prompts, (batch, prompt_len), 0, cfg.vocab, dtype=jnp.int32
+    )
+    vision_keys = jax.random.split(k_vision, batch)
+    frame_keys = jax.random.split(k_frames, batch)
+
+    futures = []
+    for i in range(batch):
+        payload: Dict[str, Any] = {
+            "tokens": prompts[i],
+            "max_new_tokens": max_new_tokens,
+        }
+        if cfg.family == "vlm":
+            payload["vision"] = jax.random.normal(
+                vision_keys[i], (cfg.n_vision_tokens, cfg.vision_dim), jnp.bfloat16
+            )
+        if cfg.family == "encdec":
+            payload["frames"] = jax.random.normal(
+                frame_keys[i], (prompt_len, cfg.d_model), jnp.bfloat16
+            )
+        futures.append(eng.submit(Request("lm", payload)))
+
+    t0 = time.perf_counter()
+    stats = eng.drain()
+    wall = time.perf_counter() - t0
+
+    tokens_out = np.stack([np.asarray(f.result()) for f in futures])
+    if tokens_out.shape != (batch, max_new_tokens):
+        raise RuntimeError(
+            f"engine returned token array {tokens_out.shape}, expected "
+            f"({batch}, {max_new_tokens})"
         )
-    if cfg.family == "encdec":
-        batch_in["frames"] = jax.random.normal(
-            key, (batch, prompt_len, cfg.d_model), jnp.bfloat16
-        )
-
-    prefill = jax.jit(steps_lib.make_prefill_step(model))
-    serve_step = jax.jit(steps_lib.make_serve_step(model), donate_argnums=(1,))
-
-    t0 = time.time()
-    logits, prefill_cache = prefill(params, batch_in)
-    t_prefill = time.time() - t0
-
-    # Move the prefill cache into a decode-sized cache (prompt + new tokens).
-    total = prompt_len + max_new_tokens
-    cache = PM.materialize(model.cache_specs(batch, total), jax.random.PRNGKey(0))
-    cache = jax.tree.map(lambda z: jnp.zeros_like(z), cache)
-    cache = _graft(cfg, cache, prefill_cache)
-
-    token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    generated: List[np.ndarray] = [np.asarray(token)]
-    t0 = time.time()
-    for i in range(max_new_tokens - 1):
-        token, logits, cache = serve_step(params, cache, token, jnp.int32(prompt_len + i))
-        generated.append(np.asarray(token))
-    t_decode = time.time() - t0
-    tokens_out = np.concatenate(generated, axis=1)
+    # A drain may execute several slabs (batch > largest bucket); sum their
+    # timings so throughput covers every served lane, not just the last slab.
+    prefill_s = sum(t.get("prefill_s", 0.0) for t in lm.timings)
+    decode_s = sum(t.get("decode_s", 0.0) for t in lm.timings)
     return {
         "arch": arch,
         "batch": batch,
         "prompt_len": prompt_len,
         "new_tokens": tokens_out.shape[1],
-        "prefill_s": round(t_prefill, 3),
-        "decode_s": round(t_decode, 3),
-        "tokens_per_s": round(batch * tokens_out.shape[1] / max(t_decode, 1e-9), 1),
+        "prefill_s": round(prefill_s, 3),
+        "decode_s": round(decode_s, 3),
+        "wall_s": round(wall, 3),
+        "tokens_per_s": round(
+            batch * tokens_out.shape[1] / max(decode_s, 1e-9), 1
+        ),
         "sample": tokens_out[0, :8].tolist(),
+        "engine": {
+            "slabs": stats["slabs"],
+            "pad_fraction": round(stats["pad_fraction"], 3),
+        },
     }
-
-
-def _graft(cfg, cache, prefill_cache):
-    """Copy prefill KV/state into the (longer) decode cache."""
-    def one(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        # KV caches: pad the sequence dim (src seq ≤ dst seq)
-        pads = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
-        return jnp.pad(src, pads).astype(dst.dtype)
-
-    return jax.tree.map(one, cache, prefill_cache)
 
 
 def main() -> None:
@@ -106,9 +112,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, batch=args.batch, prompt_len=args.prompt,
-                           max_new_tokens=args.tokens), indent=1))
+                           max_new_tokens=args.tokens, seed=args.seed), indent=1))
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ multi-pod dry-run, the CPU smoke tests and the real training loop all run the
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -149,6 +150,84 @@ def make_serve_step(model: Model, sample: str = "greedy"):
         return next_token, logits, new_cache
 
     return serve_step
+
+
+def graft_cache(cache, prefill_cache):
+    """Copy prefill KV/state into a (longer) zeroed decode cache.
+
+    Leaves with matching shapes are taken from the prefill cache; KV-style
+    leaves are zero-padded along their (shorter) sequence dims.
+    """
+
+    def one(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        pads = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+        return jnp.pad(src, pads).astype(dst.dtype)
+
+    return jax.tree.map(one, cache, prefill_cache)
+
+
+def make_generate(model: Model, sample: str = "greedy"):
+    """Prefill + decode loop with explicit token accounting.
+
+    Returns ``generate(params, batch_in, max_new_tokens, cache_key)`` →
+    ``(tokens, timing)`` where ``tokens`` is int32 of shape
+    ``(batch, max_new_tokens)`` — always exactly ``max_new_tokens`` columns:
+
+    * token 0 is sampled from the prefill logits (the model's prediction at
+      the last prompt position);
+    * token ``i`` (1 ≤ i < max_new_tokens) is sampled by the i-th decode
+      step, which consumes token ``i−1`` at sequence index
+      ``prompt_len + i − 1``;
+    * ``max_new_tokens == 0`` returns a ``(batch, 0)`` array (prefill only).
+
+    ``cache_key`` seeds the decode-cache materialization — passed explicitly
+    so the serving path has no hidden ``PRNGKey(0)`` (the cache is zeroed
+    before grafting, but the key plumbing stays auditable).
+
+    The prefill and decode steps are jitted once per ``make_generate`` call
+    and reused across invocations, so serving a stream of same-shape batches
+    compiles exactly two executables (prefill, decode) per (batch,
+    prompt_len, total_len) bucket.
+    """
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_serve_step(model, sample), donate_argnums=(1,))
+
+    def generate(params, batch_in, max_new_tokens: int, cache_key):
+        import numpy as np  # local: keep steps importable without numpy users
+
+        b, prompt_len = batch_in["tokens"].shape
+        t0 = time.perf_counter()
+        logits, prefill_cache = prefill(params, batch_in)
+        jax.block_until_ready(logits)
+        timing = {"prefill_s": time.perf_counter() - t0}
+        if max_new_tokens <= 0:
+            timing["decode_s"] = 0.0
+            return jnp.zeros((b, 0), jnp.int32), timing
+
+        total = prompt_len + max_new_tokens
+        cache = P.materialize(model.cache_specs(b, total), cache_key)
+        cache = jax.tree.map(jnp.zeros_like, cache)
+        cache = graft_cache(cache, prefill_cache)
+
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        generated = [np.asarray(token)]
+        t0 = time.perf_counter()
+        for i in range(1, max_new_tokens):
+            token, logits, cache = decode(
+                params, cache, token, jnp.int32(prompt_len + i - 1)
+            )
+            generated.append(np.asarray(token))
+        timing["decode_s"] = time.perf_counter() - t0
+        tokens = jnp.asarray(np.concatenate(generated, axis=1))
+        if tokens.shape != (b, max_new_tokens):  # survives python -O
+            raise RuntimeError(
+                f"generate: produced {tokens.shape}, expected ({b}, {max_new_tokens})"
+            )
+        return tokens, timing
+
+    return generate
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,81 @@
+"""Calibration pins for the structural FPGA cost model (paper §4.2, §5).
+
+The model's per-element costs are calibrated once against the paper's
+published endpoints; these tests pin them so future edits can't silently
+drift off Table 4 / Table 5 / Figs 9–11.
+"""
+
+import pytest
+
+from repro.core import hardware_model as hw
+
+# Paper Table 4 (ONN core resources at max implementable N).
+TABLE4_RECURRENT_48 = {"lut": 49_441, "ff": 13_906, "dsp": 0, "bram": 0}
+TABLE4_HYBRID_506 = {"lut": 41_547, "ff": 44_748, "dsp": 220, "bram": 140}
+
+
+def test_recurrent_endpoint_pins_table4():
+    assert hw.recurrent_resources(48) == TABLE4_RECURRENT_48
+
+
+def test_hybrid_endpoint_pins_table4():
+    assert hw.hybrid_resources(506) == TABLE4_HYBRID_506
+
+
+def test_max_oscillators_pins_table5():
+    assert hw.max_oscillators("recurrent") == 48
+    assert hw.max_oscillators("hybrid") == 506
+
+
+def test_capacity_ratio_matches_paper():
+    ratio = hw.max_oscillators("hybrid") / hw.max_oscillators("recurrent")
+    assert ratio == pytest.approx(10.5, abs=0.1)  # paper: 10.5×
+
+
+def test_oscillation_frequency_endpoints():
+    # Table 5: recurrent 625 kHz @ 48, hybrid 6.1 kHz @ 506.
+    assert hw.oscillation_frequency("recurrent", 48) == pytest.approx(625e3, rel=0.01)
+    assert hw.oscillation_frequency("hybrid", 506) == pytest.approx(6.1e3, rel=0.02)
+
+
+def test_loglog_lut_slopes_separate_quadratic_from_near_linear():
+    """Fig 9: recurrent LUTs scale ≈ N^2.08, hybrid ≈ N^1.22.  The model's
+    structure (not a fit) must recover the quadratic-vs-near-linear split
+    within a modest band of the paper's fitted exponents."""
+    ns_rec = [8, 12, 16, 20, 24, 32, 40, 48]
+    ns_hyb = [8, 16, 32, 64, 96, 128, 192, 256, 384, 506]
+    rec_slope, rec_r2 = hw.loglog_slope(
+        ns_rec, [hw.recurrent_resources(n)["lut"] for n in ns_rec]
+    )
+    hyb_slope, hyb_r2 = hw.loglog_slope(
+        ns_hyb, [hw.hybrid_resources(n)["lut"] for n in ns_hyb]
+    )
+    assert rec_slope == pytest.approx(2.08, abs=0.15)
+    assert hyb_slope == pytest.approx(1.22, abs=0.15)
+    assert rec_r2 > 0.99 and hyb_r2 > 0.99
+    # the separation itself — the paper's headline — must be wide
+    assert rec_slope - hyb_slope > 0.7
+
+
+def test_time_to_solution_is_cycles_over_frequency():
+    tts = hw.time_to_solution("hybrid", 506, 100)
+    assert tts == pytest.approx(100 / hw.oscillation_frequency("hybrid", 506))
+    # recurrent is ~100× faster per cycle at its capacity point
+    assert hw.time_to_solution("recurrent", 48, 100) < tts / 50
+
+
+def test_fits_respects_route_ceiling():
+    # 48 fits (92.9 % LUT), 49 does not (Table 4: routing fails past it).
+    assert hw.fits("recurrent", 48)
+    assert not hw.fits("recurrent", 49)
+    assert hw.fits("hybrid", 506)
+    assert not hw.fits("hybrid", 507)
+
+
+def test_unknown_architecture_raises():
+    with pytest.raises(ValueError):
+        hw.resources("systolic", 16)
+    with pytest.raises(ValueError):
+        hw.oscillation_frequency("systolic", 16)
+    with pytest.raises(ValueError):
+        hw.time_to_solution("systolic", 16, 1)

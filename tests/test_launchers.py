@@ -40,6 +40,24 @@ def test_serve_loop(arch):
     assert len(out["sample"]) >= 4
 
 
+@pytest.mark.parametrize("tokens", [1, 5])
+def test_serve_token_accounting_is_exact(tokens):
+    """The decode loop yields exactly max_new_tokens tokens — token 0 from
+    the prefill logits, token i from the i-th decode step (the old loop got
+    the count right only by counting the prefill token implicitly)."""
+    out = serve("qwen2-1.5b", batch=2, prompt_len=8, max_new_tokens=tokens)
+    assert out["new_tokens"] == tokens
+
+
+def test_serve_seed_changes_prompts_not_shape():
+    """PRNG is explicit: one seed key splits per use, so different seeds
+    give different streams of the same shape."""
+    a = serve("qwen2-1.5b", batch=2, prompt_len=8, max_new_tokens=3, seed=0)
+    b = serve("qwen2-1.5b", batch=2, prompt_len=8, max_new_tokens=3, seed=1)
+    assert a["new_tokens"] == b["new_tokens"] == 3
+    assert a["sample"] != b["sample"]  # independent prompt draws
+
+
 def test_onn_retrieval_service():
     solver, xi = build_solver("7x6", "hybrid")
     out = serve_requests(solver, xi, corruption=0.10, n_requests=64)
