@@ -19,7 +19,8 @@ def main() -> None:
     trials = args.trials or (50 if args.quick else 200)
 
     from benchmarks import (
-        capacity, comparison, engine, kernels, maxcut, retrieval, roofline, scaling,
+        capacity, comparison, dynamics, engine, kernels, maxcut, retrieval,
+        roofline, scaling,
     )
 
     sections = [
@@ -31,6 +32,7 @@ def main() -> None:
         ("maxcut_extra", maxcut.main, {}),
         ("roofline", roofline.main, {}),
         ("engine_bucket_policies", engine.main, {"smoke": args.quick}),
+        ("dynamics_early_exit", dynamics.main, {"smoke": args.quick}),
     ]
     t_all = time.time()
     for name, fn, kw in sections:

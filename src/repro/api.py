@@ -52,6 +52,7 @@ from repro.core.dynamics import (  # noqa: F401 — re-exported API
     pad_sigma,
     retrieve,
     run,
+    run_batch,
     sign_update,
     step,
     validate_weights,

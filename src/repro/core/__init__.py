@@ -18,6 +18,7 @@ from repro.core.dynamics import (  # noqa: F401
     make_params,
     retrieve,
     run,
+    run_batch,
     sign_update,
     step,
     validate_weights,

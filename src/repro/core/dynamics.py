@@ -30,18 +30,29 @@ both modes:
 * ``serial``   — chunked ``lax.scan`` accumulation (the hybrid serialized
   MAC, Fig. 5; ``serial_chunk`` sets the block size, any N).
 * ``pallas``   — the blocked TPU kernel (``repro.kernels``), interpret mode
-  on CPU.
+  on CPU.  In functional mode the full cycle is one fused kernel launch
+  (int8 matmul + bias + phase-align epilogue over the real batch grid).
 
 All three are bit-exact (integer associativity); spins are ±1 ``int8``,
 weights ``weight_bits``-bit signed carried in ``int8``, sums exact ``int32``.
+
+Batched-native solve (``run_batch`` / ``retrieve``): the serving hot path is
+(B, N)-first — one compiled executable advances the whole request batch per
+oscillation cycle and a chunked ``lax.while_loop`` exits as soon as every
+lane is settled or in a detected period-2 orbit (``ONNConfig.settle_chunk``
+sets the check granularity).  Early exit is bit-exact, lane for lane, with
+the fixed-length scan of ``run`` — see the batched-dynamics section below
+for the freeze/parity argument.  ``run`` keeps the fixed-length reference
+scan; the equivalence is property-tested across backends and modes.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,12 +88,21 @@ class ONNConfig:
     backend: str = "parallel"  # "parallel" | "serial" | "pallas"
     serial_chunk: int = 0  # block size for backend="serial" (0 → auto)
     use_kernel: bool = False  # deprecated: alias for backend="pallas"
+    #: Cycles simulated between early-exit checks of the batched solve
+    #: (``run_batch``/``retrieve``).  Every ``settle_chunk`` cycles the
+    #: while-loop tests whether all lanes have frozen (settled, or in a
+    #: detected period-2 orbit) and stops — networks that settle in ~5
+    #: cycles skip the remaining ~95 W·σ products of ``max_cycles``.
+    #: 0 disables early exit (one fixed-length chunk of ``max_cycles``).
+    settle_chunk: int = 8
 
     def __post_init__(self) -> None:
         if self.architecture not in ("recurrent", "hybrid"):
             raise ValueError(f"unknown architecture {self.architecture!r}")
         if self.mode not in ("functional", "rtl"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.settle_chunk < 0:
+            raise ValueError(f"settle_chunk must be >= 0, got {self.settle_chunk}")
         # Legacy route flags map onto the backend field (they predate it and
         # only ever selected one of these schedules).  The config is then
         # normalized — backend is the canonical cache key, so an old-style
@@ -90,6 +110,12 @@ class ONNConfig:
         # one jit executable.  Contradictory combinations raise rather than
         # silently dropping a flag.
         if self.use_kernel:
+            warnings.warn(
+                "ONNConfig(use_kernel=True) is deprecated; pass "
+                'backend="pallas" instead',
+                DeprecationWarning,
+                stacklevel=3,
+            )
             if self.backend not in ("parallel", "pallas"):
                 raise ValueError(
                     f"use_kernel=True (deprecated) conflicts with explicit "
@@ -287,8 +313,21 @@ def initial_phase(cfg: ONNConfig, sigma0: jax.Array) -> jax.Array:
 
 
 def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> jax.Array:
-    """One synchronous phase update (rotating frame)."""
+    """One synchronous phase update (rotating frame); ``phase``: (..., N).
+
+    On the pallas backend the whole cycle is one fused kernel launch —
+    blocked int8 matmul + bias + phase-align epilogue over the real batch
+    grid (``repro.kernels.ops.phase_step``) — instead of a coupling-sum
+    kernel followed by elementwise alignment.  Bit-exact either way.
+    """
     sigma = osc.spin(phase, cfg.phase_bits)
+    if cfg.backend == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
+
+        half = osc.n_positions(cfg.phase_bits) // 2
+        return kernel_ops.phase_step(
+            params.weights, sigma, params.bias, phase, half=half
+        )
     s = weighted_sum(cfg, params.weights, sigma) + params.bias
     return osc.phase_align(phase, s, cfg.phase_bits)
 
@@ -450,6 +489,269 @@ def _run_rtl(
 
 
 # ---------------------------------------------------------------------------
+# Batched-native dynamics: (B, N)-first solve with per-lane early exit
+# ---------------------------------------------------------------------------
+#
+# The hot path of the serving engine is a *batch* of problems against shared
+# coupling hardware — the paper's Table 7 settles in a handful of cycles, so
+# scanning all ``max_cycles`` wastes ~95% of the W·σ products.  The batched
+# runner below drives one (B, N) state through a chunked ``lax.while_loop``
+# that stops as soon as every lane is *frozen*, and the weighted sums hit the
+# backends with the real batch dimension (one (B,N)×(N,N) contraction per
+# cycle) instead of a vmap closure over per-lane matvecs.
+#
+# Bit-exactness with the fixed-length scan is by construction, not by
+# approximation.  A lane freezes only when its *full* per-cycle carry — phase
+# plus, in rtl mode, the lab-frame spins the hybrid consumes one slow clock
+# later — is provably on its final trajectory:
+#
+# * carry fixed point (carry(t+1) == carry(t)): the cycle map is
+#   deterministic and time-invariant, so the remaining cycles are no-ops;
+# * carry period-2 orbit (carry(t+1) == carry(t-1) != carry(t)): the lane
+#   alternates between two states forever; the phase the fixed scan would
+#   report at ``max_cycles`` is recovered from the parity of the remaining
+#   cycle count (``frozen_p2`` lanes in ``_batch_result``).
+#
+# Lanes whose *phase* looks settled/period-2 while the rtl hybrid's amplitude
+# history still differs keep running (the flags latch exactly as in the
+# fixed scan, but no freeze), so pathological trajectories stay bit-exact at
+# the price of a longer scan.  The settle bookkeeping (settled / cycled /
+# settle_cycle) updates with the same formulas as ``step`` until freeze, and
+# a frozen lane's flags cannot change in the fixed scan afterwards.
+
+
+class _BatchCarry(NamedTuple):
+    """Internal while-loop carry of the batched runner (all lanes-first)."""
+
+    phase: jax.Array  # (B, N) uint8 phases, cycle t
+    prev_phase: jax.Array  # (B, N) phases, cycle t-1
+    aux: jax.Array  # (B, N) rtl lab spins one clock back ((B, 1) zeros otherwise)
+    prev_aux: jax.Array  # (B, N) aux one cycle earlier
+    settle_cycle: jax.Array  # (B,) int32 first cycle with no phase change
+    settled: jax.Array  # (B,) bool
+    cycled: jax.Array  # (B,) bool: phase-level period-2 detected
+    frozen: jax.Array  # (B,) bool: lane provably on its final trajectory
+    frozen_p2: jax.Array  # (B,) bool: frozen inside a period-2 orbit
+    freeze_cycle: jax.Array  # (B,) int32 cycle count at freeze
+    t: jax.Array  # () int32 cycles elapsed (shared clock)
+
+
+def _shard_lanes(x: jax.Array) -> jax.Array:
+    """Constrain a lanes-first array to the mesh batch axis.
+
+    A no-op without an active :mod:`repro.distributed.sharding` rules
+    context; under a mesh it splits the request batch across devices so a
+    multi-device solve shards the (B,N)×(N,N) contraction by rows of σ.
+    """
+    from repro.distributed import sharding as shard_lib
+
+    return shard_lib.shard(x, "batch", *([None] * (x.ndim - 1)))
+
+
+def _constrain_params(params: OnnParams) -> OnnParams:
+    from repro.distributed import sharding as shard_lib
+
+    return shard_lib.constrain_onn(params)
+
+
+def _rtl_cycle_batch(
+    cfg: ONNConfig,
+    params: OnnParams,
+    t0: jax.Array,
+    t: jax.Array,
+    phase: jax.Array,
+    aux: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One oscillation cycle (= ``clocks_per_cycle`` slow-clock edges) of the
+    rtl dynamics for all lanes at once; ``t0``: (B,) enable-signal offsets."""
+    clocks = cfg.clocks_per_cycle
+    half = clocks // 2
+
+    def edge(carry, k):
+        ph, sigma_prev = carry
+        ref_phase = jnp.mod(t0 + t * clocks + k, clocks)  # (B,)
+        sign_ref = jnp.where(ref_phase < half, jnp.int32(1), jnp.int32(-1))
+        theta_lab = (ph.astype(jnp.int32) + ref_phase[:, None]) % clocks
+        sigma_lab = osc.spin(theta_lab.astype(jnp.uint8), cfg.phase_bits)
+        sigma_used = sigma_prev if cfg.architecture == "hybrid" else sigma_lab
+        s = weighted_sum(cfg, params.weights, sigma_used) + params.bias
+        new_ph = osc.phase_align(ph, s * sign_ref[:, None], cfg.phase_bits)
+        return (new_ph, sigma_lab), None
+
+    (phase, aux), _ = jax.lax.scan(edge, (phase, aux), jnp.arange(clocks))
+    return phase, aux
+
+
+def _batch_step(cfg: ONNConfig, params: OnnParams, t0: jax.Array, c: _BatchCarry) -> _BatchCarry:
+    """One cycle of the batched dynamics + settle/freeze bookkeeping."""
+    if cfg.mode == "functional":
+        new_phase = functional_update(cfg, params, c.phase)
+        new_aux = c.aux
+    else:
+        new_phase, new_aux = _rtl_cycle_batch(cfg, params, t0, c.t, c.phase, c.aux)
+    new_phase = _shard_lanes(new_phase)
+
+    t = c.t
+    active = ~c.frozen & (t < cfg.max_cycles)
+    not_first = t > 0
+    lane_unchanged = jnp.all(new_phase == c.phase, axis=-1)
+    phase_p2 = jnp.all(new_phase == c.prev_phase, axis=-1)
+    is_cycle2 = phase_p2 & ~lane_unchanged & not_first
+    # Flag bookkeeping: identical per lane to step()/_run_rtl's fixed scan.
+    settle_cycle = jnp.where(active & lane_unchanged & ~c.settled, t, c.settle_cycle)
+    settled = c.settled | (active & lane_unchanged)
+    cycled = c.cycled | (active & is_cycle2 & ~settled)
+    # Freeze decisions: require the FULL carry (phase and amplitude history)
+    # to repeat, so frozen lanes are provably on their final trajectory.
+    aux_unchanged = jnp.all(new_aux == c.aux, axis=-1)
+    aux_p2 = jnp.all(new_aux == c.prev_aux, axis=-1)
+    carry_fixed = lane_unchanged & aux_unchanged
+    carry_p2 = phase_p2 & aux_p2 & ~carry_fixed & not_first
+    newly_frozen = active & (carry_fixed | carry_p2)
+
+    upd = active[:, None]
+    return _BatchCarry(
+        phase=jnp.where(upd, new_phase, c.phase),
+        prev_phase=jnp.where(upd, c.phase, c.prev_phase),
+        aux=jnp.where(upd, new_aux, c.aux),
+        prev_aux=jnp.where(upd, c.aux, c.prev_aux),
+        settle_cycle=settle_cycle,
+        settled=settled,
+        cycled=cycled,
+        frozen=c.frozen | newly_frozen,
+        frozen_p2=c.frozen_p2 | (newly_frozen & carry_p2),
+        freeze_cycle=jnp.where(newly_frozen, t + 1, c.freeze_cycle),
+        t=t + 1,
+    )
+
+
+def _batch_result(cfg: ONNConfig, c: _BatchCarry) -> ONNResult:
+    """Final state → result, with the period-2 parity reconstruction.
+
+    A lane frozen at cycle ``freeze_cycle`` inside a period-2 orbit holds
+    carry C(freeze_cycle); the fixed scan would have kept alternating, ending
+    on C(freeze_cycle) iff ``max_cycles - freeze_cycle`` is even, else on the
+    other orbit state (held in ``prev_phase``).
+    """
+    parity_odd = ((cfg.max_cycles - c.freeze_cycle) % 2) == 1
+    swap = c.frozen_p2 & parity_odd
+    final_phase = jnp.where(swap[:, None], c.prev_phase, c.phase)
+    return ONNResult(
+        final_phase=final_phase,
+        final_sigma=osc.spin(final_phase, cfg.phase_bits),
+        settle_cycle=c.settle_cycle,
+        settled=c.settled,
+        cycled=c.cycled,
+    )
+
+
+def _jitter_offsets(
+    cfg: ONNConfig, keys: Optional[jax.Array], batch: int
+) -> jax.Array:
+    """Per-lane enable-signal offsets t0 ∈ [0, clocks); zeros without jitter."""
+    if not (cfg.mode == "rtl" and cfg.sync_jitter):
+        return jnp.zeros((batch,), jnp.int32)
+    if keys is None:
+        raise ValueError("sync_jitter requires PRNG keys")
+    return jax.vmap(
+        lambda k: jax.random.randint(k, (), 0, cfg.clocks_per_cycle, dtype=jnp.int32)
+    )(keys)
+
+
+def _run_batched(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0: jax.Array,
+    keys: Optional[jax.Array],
+) -> ONNResult:
+    """The batched early-exit runner; ``phase0``: (B, N), ``keys``: (B,) or None."""
+    TRACE_COUNTER["run_batch"] += 1
+    b = phase0.shape[0]
+    params = _constrain_params(params)
+    phase0 = _shard_lanes(phase0)
+    t0 = _jitter_offsets(cfg, keys, b)
+    if cfg.mode == "rtl":
+        clocks = cfg.clocks_per_cycle
+        ref0 = jnp.mod(t0, clocks)
+        theta_lab0 = (phase0.astype(jnp.int32) + ref0[:, None]) % clocks
+        aux0 = osc.spin(theta_lab0.astype(jnp.uint8), cfg.phase_bits)
+    else:
+        aux0 = jnp.zeros((b, 1), jnp.int8)  # no amplitude history to track
+
+    carry0 = _BatchCarry(
+        phase=phase0,
+        prev_phase=phase0,
+        aux=aux0,
+        prev_aux=aux0,
+        settle_cycle=jnp.full((b,), cfg.max_cycles, jnp.int32),
+        settled=jnp.zeros((b,), bool),
+        cycled=jnp.zeros((b,), bool),
+        frozen=jnp.zeros((b,), bool),
+        frozen_p2=jnp.zeros((b,), bool),
+        freeze_cycle=jnp.full((b,), cfg.max_cycles, jnp.int32),
+        t=jnp.int32(0),
+    )
+    chunk = cfg.settle_chunk if cfg.settle_chunk > 0 else cfg.max_cycles
+    chunk = max(1, min(chunk, cfg.max_cycles))
+
+    def body(c: _BatchCarry) -> _BatchCarry:
+        return jax.lax.fori_loop(
+            0, chunk, lambda _, cc: _batch_step(cfg, params, t0, cc), c
+        )
+
+    def cond(c: _BatchCarry) -> jax.Array:
+        return (c.t < cfg.max_cycles) & ~jnp.all(c.frozen)
+
+    final = jax.lax.while_loop(cond, body, carry0)
+    return _batch_result(cfg, final)
+
+
+def _lane_keys(
+    cfg: ONNConfig, keys: Optional[jax.Array], batch: int
+) -> Optional[jax.Array]:
+    """One key per lane: a single key is split per request; batches pass through.
+
+    New-style typed keys are scalars (a batch has ndim 1); legacy uint32 keys
+    have shape (2,) (a batch has ndim 2).
+    """
+    if keys is None:
+        return None
+    typed = jnp.issubdtype(keys.dtype, jax.dtypes.prng_key)
+    if keys.ndim == (0 if typed else 1):
+        keys = jax.random.split(keys, batch)
+    return keys
+
+
+def _require_keys_if_random(cfg: ONNConfig, keys: Optional[jax.Array], what: str) -> None:
+    if keys is None and cfg.mode == "rtl" and cfg.sync_jitter:
+        raise ValueError(
+            f"{what}: this config draws randomness (rtl sync_jitter); pass "
+            "keys= (a (B, 2) batch of keys, or one key to split per request)"
+        )
+
+
+def _sharding_cache_key() -> Optional[Tuple]:
+    """The active sharding rules/mesh context as a jit-cache discriminator.
+
+    ``_shard_lanes``/``_constrain_params`` bake ``with_sharding_constraint``
+    ops in at *trace* time from a thread-local context that ``jax.jit``'s
+    cache key knows nothing about.  The batched entry points therefore pass
+    this key as an extra *static* argument (None outside any context), so
+    each context traces its own executable — otherwise whichever call
+    happened first would decide whether a mesh context actually shards (a
+    warmed-up cache would make ``--shard-batch`` silently a no-op, and the
+    reverse order would leak mesh-bound executables outside the context).
+    """
+    from repro.distributed import sharding as shard_lib
+
+    rules, mesh = shard_lib.current_rules(), shard_lib.current_mesh()
+    if rules is None and mesh is None:
+        return None
+    rules_key = None if rules is None else tuple(sorted(rules.items()))
+    return (rules_key, mesh)
+
+
+# ---------------------------------------------------------------------------
 # Public jitted entry points: one compile per (config, shape)
 # ---------------------------------------------------------------------------
 
@@ -485,33 +787,32 @@ def run(
     return _run(cfg, params, phase0, key)
 
 
+@partial(jax.jit, static_argnums=(0, 4))
 def _retrieve(
     cfg: ONNConfig,
     params: OnnParams,
     sigma0_batch: jax.Array,
     keys: Optional[jax.Array] = None,
+    _ctx: Optional[Tuple] = None,  # static sharding-context discriminator
 ) -> ONNResult:
     TRACE_COUNTER["retrieve"] += 1
-    phase0 = jax.vmap(lambda s: initial_phase(cfg, s))(sigma0_batch)
-    if keys is None:
-        return jax.vmap(lambda p: _run(cfg, params, p, None))(phase0)
-    # A single key is split into one subkey per request.  New-style typed
-    # keys are scalars (a batch has ndim 1); legacy uint32 keys have shape
-    # (2,) (a batch has ndim 2).
-    typed = jnp.issubdtype(keys.dtype, jax.dtypes.prng_key)
-    if keys.ndim == (0 if typed else 1):
-        keys = jax.random.split(keys, sigma0_batch.shape[0])
-    return jax.vmap(lambda p, k: _run(cfg, params, p, k))(phase0, keys)
+    phase0 = initial_phase(cfg, sigma0_batch)  # elementwise: works lanes-first
+    return _run_batched(cfg, params, phase0, _lane_keys(cfg, keys, sigma0_batch.shape[0]))
 
 
-@partial(jax.jit, static_argnums=0)
 def retrieve(
     cfg: ONNConfig,
     params: OnnParams,
     sigma0_batch: jax.Array,
     keys: Optional[jax.Array] = None,
 ) -> ONNResult:
-    """Run a batch of initial spin patterns to steady state (vmapped).
+    """Run a (B, N) batch of initial spin patterns to steady state.
+
+    Batched-native: the whole batch advances through one (B,N)×(N,N) coupling
+    contraction per cycle and stops early once every lane has settled or
+    entered a detected period-2 orbit — bit-exact with the fixed-length scan
+    of :func:`run` per lane (``cfg.settle_chunk`` sets the early-exit check
+    granularity; 0 disables).
 
     PRNG use is explicit: pass ``keys`` of shape (B, 2) — one key per request
     — or a single key (shape (2,)), which is split into one subkey per
@@ -519,12 +820,44 @@ def retrieve(
     randomness (``mode="rtl"`` with ``sync_jitter``) raise if ``keys`` is
     None instead of silently correlating every run in the batch.
     """
-    if keys is None and cfg.mode == "rtl" and cfg.sync_jitter:
-        raise ValueError(
-            "retrieve: this config draws randomness (rtl sync_jitter); pass "
-            "keys= (a (B, 2) batch of keys, or one key to split per request)"
-        )
-    return _retrieve(cfg, params, sigma0_batch, keys)
+    _require_keys_if_random(cfg, keys, "retrieve")
+    return _retrieve(cfg, params, sigma0_batch, keys, _sharding_cache_key())
+
+
+def run_batch(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+) -> ONNResult:
+    """Evolve a (B, N) batch of phase states to steady state, early-exiting.
+
+    The lanes-first sibling of :func:`run`: one compiled executable advances
+    the whole batch per oscillation cycle (the backends see the real batch
+    dimension) inside a chunked ``lax.while_loop`` that stops as soon as
+    every lane is settled or in a detected period-2 orbit.  Results are
+    bit-exact, lane for lane, with ``jax.vmap(run)`` over the same inputs —
+    including ``settle_cycle``/``settled``/``cycled`` and rtl ``sync_jitter``
+    (each lane draws its own enable-signal offset from its key).
+
+    ``keys`` is one key per lane ((B, 2) legacy or (B,) typed), or a single
+    key split per lane; required only when the config draws randomness.
+    """
+    _require_keys_if_random(cfg, keys, "run_batch")
+    return _run_batch_traced(cfg, params, phase0_batch, keys, _sharding_cache_key())
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def _run_batch_traced(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+    _ctx: Optional[Tuple] = None,  # static sharding-context discriminator
+) -> ONNResult:
+    return _run_batched(
+        cfg, params, phase0_batch, _lane_keys(cfg, keys, phase0_batch.shape[0])
+    )
 
 
 # ---------------------------------------------------------------------------

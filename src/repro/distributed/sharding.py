@@ -143,3 +143,29 @@ def onn_param_shardings(
         weights=NamedSharding(mesh, onn_weight_spec(multi_pod, layout)),
         bias=NamedSharding(mesh, P(None)),
     )
+
+
+def constrain_onn(params, layout: str = "replicated"):
+    """Sharding-constrain ``OnnParams`` inside a traced solve.
+
+    The in-jit companion of :func:`onn_param_shardings`: the batched solve
+    (``repro.core.dynamics.run_batch``/``retrieve``) calls this on its params
+    so that, under an active mesh, the coupling matrix is pinned to the
+    requested layout while the request batch splits over the data axes.  The
+    default ``"replicated"`` is the batch-parallel serving placement (W on
+    every device, lanes sharded); a no-op outside a rules+mesh context.
+    """
+    mesh = current_mesh()
+    if mesh is None or current_rules() is None:
+        return params
+    from repro.core.dynamics import OnnParams
+
+    multi_pod = "pod" in mesh.axis_names
+    return OnnParams(
+        weights=jax.lax.with_sharding_constraint(
+            params.weights, NamedSharding(mesh, onn_weight_spec(multi_pod, layout))
+        ),
+        bias=jax.lax.with_sharding_constraint(
+            params.bias, NamedSharding(mesh, P(None))
+        ),
+    )

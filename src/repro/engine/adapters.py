@@ -45,7 +45,19 @@ class RetrievalEngineSolver:
     ``repro.core.dynamics.pad_params``.  Padded configs/params are cached
     per bucket, so every request at a bucket reuses one ``retrieve``
     executable per batch slab size.
+
+    A slab solve is one call into the batched-native ``retrieve`` (the whole
+    slab advances per cycle and exits early once every lane freezes), and
+    every slab feeds an EMA of the *measured* settle cycles back into
+    :meth:`cost_units`, so latency quotes start at the worst-case
+    ``max_cycles`` and tighten toward observed behaviour as traffic flows.
     """
+
+    #: EMA smoothing for observed per-slab mean settle cycles.
+    SETTLE_EMA_ALPHA = 0.3
+    #: Blend ramp: after k observed slabs the EMA carries k/(k+WARMUP) of the
+    #: quoted cycle count (the rest stays on the worst-case max_cycles).
+    SETTLE_WARMUP = 8.0
 
     def __init__(self, solver: Optional[Any] = None, xi: Any = None, **cfg_kwargs: Any):
         from repro.api import RetrievalSolver  # local: api imports this module
@@ -58,6 +70,9 @@ class RetrievalEngineSolver:
             raise TypeError("pass either a built solver or xi= + config kwargs")
         self.solver = solver
         self._padded: Dict[int, Tuple[Any, Any]] = {}
+        self._settle_ema: Optional[float] = None
+        self._settle_obs: int = 0
+        self._settle_pending: List[jax.Array] = []  # per-slab mean, on device
 
     @property
     def config(self):
@@ -113,6 +128,7 @@ class RetrievalEngineSolver:
             lane_keys = _stack_keys(per_lane, batch_bucket)
 
         res = api.retrieve(cfg_b, params_b, batch, lane_keys)
+        self._observe_settle(res, total)
         n = self.config.n
         out: List[Any] = []
         offset = 0
@@ -131,10 +147,73 @@ class RetrievalEngineSolver:
             offset += c
         return out
 
+    # -- measured settle-cycle cost model ----------------------------------
+
+    def _observe_settle(self, res: Any, lanes: int) -> None:
+        """Queue one slab's measured settle cycles for the EMA (real lanes
+        only; unsettled/cycled lanes are charged the worst case).
+
+        Only the tiny on-device mean is enqueued — no host sync here, so a
+        drain keeps dispatching slabs without waiting for each solve to
+        finish.  The fold to host happens lazily at quote/stats time
+        (:meth:`_fold_pending`)."""
+        if lanes <= 0:
+            return
+        mc = self.config.max_cycles
+        eff = jnp.where(res.settled[:lanes], res.settle_cycle[:lanes] + 1, mc)
+        self._settle_pending.append(jnp.mean(eff.astype(jnp.float32)))
+
+    def _fold_pending(self, block: bool = True) -> None:
+        """Fold queued slab means into the EMA.  ``block=False`` folds only
+        results whose computation already finished (the post-slab cost-model
+        path uses it to stay off the device's critical path)."""
+        remaining: List[jax.Array] = []
+        for arr in self._settle_pending:
+            if not block:
+                try:
+                    if not arr.is_ready():
+                        remaining.append(arr)
+                        continue
+                except AttributeError:  # jax without Array.is_ready()
+                    pass
+            mean_eff = float(arr)
+            a = self.SETTLE_EMA_ALPHA
+            self._settle_ema = (
+                mean_eff
+                if self._settle_ema is None
+                else (1 - a) * self._settle_ema + a * mean_eff
+            )
+            self._settle_obs += 1
+        self._settle_pending = remaining
+
+    def expected_cycles(self, block: bool = False) -> float:
+        """Quoted oscillation cycles per solve: worst-case ``max_cycles``
+        blended toward the measured settle-cycle EMA as slabs are observed
+        (the early-exit batched solve really does stop at the EMA, so the
+        quote converges on executed work instead of the scan bound)."""
+        self._fold_pending(block=block)
+        mc = float(self.config.max_cycles)
+        if self._settle_ema is None:
+            return mc
+        c = self._settle_obs / (self._settle_obs + self.SETTLE_WARMUP)
+        return c * min(self._settle_ema, mc) + (1.0 - c) * mc
+
+    def stats(self) -> Dict[str, Any]:
+        """Measured settle-cycle state (surfaced by ``Engine.stats()``)."""
+        self._fold_pending(block=True)
+        return {
+            "max_cycles": self.config.max_cycles,
+            "settle_ema_cycles": self._settle_ema,
+            "settle_slabs_observed": self._settle_obs,
+            "expected_cycles": round(self.expected_cycles(block=True), 3),
+        }
+
     def cost_units(self, bucket_sig: int, batch_bucket: int) -> float:
         cfg = self.config
         per_cycle = bucket_sig * bucket_sig
-        cycles = cfg.max_cycles * (cfg.clocks_per_cycle if cfg.mode == "rtl" else 1)
+        cycles = self.expected_cycles() * (
+            cfg.clocks_per_cycle if cfg.mode == "rtl" else 1
+        )
         return float(batch_bucket) * per_cycle * cycles
 
     def fpga_seconds(self, bucket_sig: int) -> Optional[float]:

@@ -337,6 +337,13 @@ class Engine:
             **self._counts,
             "pad_fraction": 0.0 if served == 0 else self._counts["lanes_padding"] / served,
             "installed": sorted(self._solvers),
+            # Workload-specific measurements, e.g. the retrieval adapter's
+            # settle-cycle EMA (quotes tighten from max_cycles toward it).
+            "solvers": {
+                name: s.stats()
+                for name, s in sorted(self._solvers.items())
+                if hasattr(s, "stats")
+            },
             "pending": pending,
             "slabs_per_bucket": {
                 f"{w}:{b!r}:batch{bb}": c

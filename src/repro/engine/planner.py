@@ -35,11 +35,20 @@ DEFAULT_COST_RATE = 2e-9
 
 @dataclasses.dataclass(frozen=True)
 class Estimate:
-    """A per-request (or per-slab) latency quote."""
+    """A per-request (or per-slab) latency quote.
+
+    ``units`` is the solver's abstract work estimate behind a model-sourced
+    quote.  For ONN retrieval it is lanes · N² · *expected* cycles, where the
+    expected cycle count blends the worst-case ``max_cycles`` with the
+    measured settle-cycle EMA (``adapters.RetrievalEngineSolver``) — the
+    early-exit batched solve stops when lanes freeze, so quotes tighten
+    toward executed work as traffic flows instead of assuming the scan bound.
+    """
 
     seconds: float
     source: str  # "ema" (measured) | "model" (cost-rate cold start)
     fpga_seconds: Optional[float] = None  # paper-hardware time-to-solution
+    units: float = 0.0  # abstract work behind a model quote (0 if unknown)
 
 
 class Planner:
@@ -99,9 +108,14 @@ class Planner:
         """Latency quote for one slab at ``key``: EMA if measured, else model."""
         ema = self._ema_s.get(key)
         if ema is not None:
-            return Estimate(seconds=ema, source="ema", fpga_seconds=fpga_seconds)
+            return Estimate(
+                seconds=ema, source="ema", fpga_seconds=fpga_seconds, units=units
+            )
         return Estimate(
-            seconds=units * self._cost_rate, source="model", fpga_seconds=fpga_seconds
+            seconds=units * self._cost_rate,
+            source="model",
+            fpga_seconds=fpga_seconds,
+            units=units,
         )
 
     def snapshot(self) -> Dict[str, object]:

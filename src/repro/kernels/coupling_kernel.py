@@ -200,6 +200,89 @@ def onn_step_pallas(
 
 
 # ---------------------------------------------------------------------------
+# phase_step_fused: the batched-native functional-mode cycle.  Same blocked
+# int8 matmul as onn_step_fused, but the epilogue applies the *phase*
+# alignment rule (paper §2.3) instead of the spin sign rule, so one kernel
+# launch advances the whole (B, N) phase state by one oscillation cycle —
+# ties keep the current phase counter, which may be non-canonical (any value
+# in [0, 2**phase_bits)), not just the ±1-spin phases.
+# ---------------------------------------------------------------------------
+
+
+def _phase_step_kernel(half: int, sigma_ref, w_ref, bias_ref, phase_ref, out_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        sigma_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        s = acc_ref[...] + bias_ref[...].astype(jnp.int32)  # (bb, bi)
+        keep = phase_ref[...]
+        out_ref[...] = jnp.where(
+            s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), keep)
+        )
+
+
+def phase_step_pallas(
+    sigma: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    phase: jax.Array,
+    *,
+    half: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused θ' = phase-align(W σ + h, θ); S == 0 keeps the current phase.
+
+    ``sigma``: (B, N) int8 spins of ``phase``; ``phase``: (B, N) int32
+    counters; ``half`` is the anti-phase counter value (2**phase_bits / 2).
+    Shapes must be pre-padded to block multiples (``pad_to_blocks``).
+    """
+    b, n = sigma.shape
+    ni, nk = w.shape
+    _require(n == nk, f"phase_step_pallas: sigma N={n} != weights N={nk}")
+    _require(bias.shape == (ni,), f"phase_step_pallas: bias {bias.shape} != ({ni},)")
+    _require(
+        phase.shape == (b, ni),
+        f"phase_step_pallas: phase {phase.shape} != ({b}, {ni})",
+    )
+    _require(
+        b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0,
+        f"phase_step_pallas: shapes (b={b}, ni={ni}, nk={nk}) not multiples "
+        f"of blocks ({block_b}, {block_i}, {block_k}); pad with pad_to_blocks",
+    )
+    grid = (ni // block_i, b // block_b, nk // block_k)
+    bias2d = bias.reshape(1, -1)
+    return pl.pallas_call(
+        functools.partial(_phase_step_kernel, half),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, bb, k: (bb, k)),
+            pl.BlockSpec((block_i, block_k), lambda i, bb, k: (i, k)),
+            pl.BlockSpec((1, block_i), lambda i, bb, k: (0, i)),
+            pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ni), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_i), jnp.int32)],
+        interpret=interpret,
+    )(sigma, w, bias2d, phase.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 # quantized_matvec: the transferable version of the hybrid insight — a
 # weight-streaming int8 GEMV with on-chip f32 accumulation and a per-row
 # dequantization epilogue (memory-bound decode shapes).

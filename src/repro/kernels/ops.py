@@ -90,6 +90,50 @@ def onn_step(
     return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
 
 
+@functools.partial(jax.jit, static_argnames=("half", "use_pallas", "block_b", "block_i", "block_k"))
+def phase_step(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
+    *,
+    half: int,
+    use_pallas: bool = True,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    block_i: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Fused functional-mode cycle: θ' = phase-align(W σ + h, θ).
+
+    ``sigma``/``phase`` of shape (N,) or (..., N); ``phase`` is returned in
+    its input dtype.  One kernel launch per oscillation cycle — the batched
+    ONN hot path (``repro.core.dynamics``, backend="pallas") lands here with
+    the full request batch as the real ``block_b`` grid dimension.
+    """
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    n = w.shape[0]
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    ph2d = phase.reshape(-1, n).astype(jnp.int32)
+    h = jnp.zeros((n,), jnp.int32) if bias is None else bias.astype(jnp.int32)
+    if not use_pallas:
+        out = _ref.phase_step_ref(w, sig2d, h, ph2d, half)
+    else:
+        bb = _pick_block(sig2d.shape[0], block_b)
+        bi = _pick_block(n, block_i)
+        bk = _pick_block(n, block_k)
+        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
+        h_p = _k.pad_to_blocks(h, (bi,))
+        ph_p = _k.pad_to_blocks(ph2d, (bb, bi))
+        out = _k.phase_step_pallas(
+            sig_p, w_p, h_p, ph_p,
+            half=half, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret(),
+        )[: sig2d.shape[0], :n]
+    out = out.astype(phase.dtype)
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
 def quantized_matvec(
     w_q: jax.Array,

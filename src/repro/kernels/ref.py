@@ -31,6 +31,26 @@ def onn_step_ref(w: jax.Array, sigma: jax.Array, bias: jax.Array | None = None) 
     )
 
 
+def phase_step_ref(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array,
+    phase: jax.Array,
+    half: int,
+) -> jax.Array:
+    """Fused coupling sum + phase alignment (paper §2.3), int32 phases.
+
+    ``phase``: (B, N) int32 rotating-frame phase counters.  S > 0 snaps the
+    oscillator in phase with the reference (phase 0), S < 0 in anti-phase
+    (phase ``half``), S == 0 keeps the current phase — the whole functional-
+    mode oscillation cycle in one map.
+    """
+    s = coupling_sum_ref(w, sigma) + bias.astype(jnp.int32)[None, :]
+    return jnp.where(
+        s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), phase.astype(jnp.int32))
+    )
+
+
 def quantized_matvec_ref(w_q: jax.Array, scale: jax.Array, x: jax.Array) -> jax.Array:
     """General quantized GEMV: y = (w_q · scale) @ x in f32.
 

@@ -12,6 +12,12 @@ Because the solver is the functional pytree API (weights traced, config
 static), re-training or hot-swapping the weight matrix does NOT recompile
 the serving executable: any same-bucket solver reuses the first compile.
 
+Bucket solves are one call into the batched-native ``retrieve``: the slab
+advances through one (B,N)×(N,N) contraction per cycle and exits as soon as
+every lane settles (``--settle-chunk`` sets the check granularity), and
+``--shard-batch`` splits each slab over all local devices (replicated
+coupling matrix, data-parallel lanes).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.retrieve --dataset 10x10 \
       --corruption 0.25 --requests 256 --architecture hybrid --backend pallas
@@ -20,15 +26,20 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import dataclasses
 import json
 import time
-from typing import Any, Dict, Tuple
+import warnings
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import RetrievalSolver
 from repro.data import patterns as pat
+from repro.distributed import sharding as shard_lib
 from repro.engine import DEFAULT_BATCH_BUCKETS, Engine, Request
 
 
@@ -40,6 +51,7 @@ def build_solver(
     phase_bits: int = 4,
     max_cycles: int = 100,
     backend: str = "parallel",
+    settle_chunk: int = 8,
 ) -> Tuple[RetrievalSolver, jax.Array]:
     """Train a solver for one letter dataset; returns (solver, patterns)."""
     xi = pat.load_dataset(dataset)  # (P, N) ±1
@@ -51,8 +63,39 @@ def build_solver(
         mode=mode,
         max_cycles=max_cycles,
         backend=backend,
+        settle_chunk=settle_chunk,
     )
     return solver, xi
+
+
+def batch_mesh() -> Optional[jax.sharding.Mesh]:
+    """A ("data", "model") mesh over all local devices, data-major.
+
+    The sharded-retrieve recipe: activate this mesh with
+    ``sharding.use_rules(single_pod_rules(), mesh)`` and replicate the
+    coupling matrix (``onn_param_shardings(mesh, layout="replicated")``);
+    the batched solve then splits each request slab over the data axis —
+    the software analogue of the paper's deferred multi-FPGA clustering,
+    with the batch rather than the matrix as the scaling axis.  Returns
+    None when there is a single device (nothing to shard).
+    """
+    devices = jax.devices()
+    if len(devices) < 2:
+        return None
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(len(devices), 1), ("data", "model")
+    )
+
+
+def _sharded_context(solver: RetrievalSolver, mesh: Optional[jax.sharding.Mesh]):
+    """(possibly resharded solver, active rules context) for serving."""
+    if mesh is None:
+        return solver, contextlib.nullcontext()
+    params = jax.device_put(
+        solver.params, shard_lib.onn_param_shardings(mesh, layout="replicated")
+    )
+    solver = dataclasses.replace(solver, params=params)
+    return solver, shard_lib.use_rules(shard_lib.single_pod_rules(), mesh)
 
 
 def serve_requests(
@@ -65,6 +108,7 @@ def serve_requests(
     batch_buckets: Tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
     n_policy: Any = "pow2",
     coalesce: bool = True,
+    mesh: Optional[jax.sharding.Mesh] = None,
 ) -> Dict[str, Any]:
     p, n = xi.shape
     key = jax.random.PRNGKey(seed)
@@ -74,16 +118,18 @@ def serve_requests(
     ckeys = jax.random.split(k2, n_requests)
     corrupted = jax.vmap(lambda t, k: pat.corrupt(t, k, corruption))(targets, ckeys)
 
+    solver, rules_ctx = _sharded_context(solver, mesh)
     eng = Engine(
         k_engine, batch_buckets=batch_buckets, n_policy=n_policy, coalesce=coalesce
     )
     eng.install("retrieval", solver.as_engine_solver())
 
     t0 = time.perf_counter()
-    futures = [
-        eng.submit(Request("retrieval", corrupted[i])) for i in range(n_requests)
-    ]
-    stats = eng.drain()
+    with rules_ctx:
+        futures = [
+            eng.submit(Request("retrieval", corrupted[i])) for i in range(n_requests)
+        ]
+        stats = eng.drain()
     sigma = jnp.stack([f.result().final_sigma for f in futures])
     settle_cycle = jnp.stack([f.result().settle_cycle for f in futures])
     settled = jnp.stack([f.result().settled for f in futures])
@@ -109,7 +155,11 @@ def serve_requests(
             "slabs": stats["slabs"],
             "pad_fraction": round(stats["pad_fraction"], 3),
             "slabs_per_bucket": stats["slabs_per_bucket"],
+            # Measured settle-cycle cost model: quotes start at max_cycles
+            # and tighten toward the early-exit EMA as slabs are served.
+            "retrieval": stats["solvers"].get("retrieval", {}),
         },
+        "mesh_devices": 1 if mesh is None else mesh.devices.size,
     }
 
 
@@ -125,6 +175,11 @@ def main() -> None:
                     help="weighted-sum schedule for the coupling sum")
     ap.add_argument("--use-kernel", action="store_true",
                     help="deprecated alias for --backend pallas")
+    ap.add_argument("--settle-chunk", type=int, default=8,
+                    help="cycles between early-exit checks (0 = fixed scan)")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="split request slabs over all local devices "
+                         "(data-parallel mesh; no-op on one device)")
     ap.add_argument("--n-policy", default="pow2",
                     help='engine N bucketing: "pow2", "exact", or comma sizes')
     ap.add_argument("--max-batch", type=int, default=max(DEFAULT_BATCH_BUCKETS),
@@ -133,9 +188,17 @@ def main() -> None:
                     help="serve each request in its own slab (latency-first)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    backend = "pallas" if args.use_kernel else args.backend
+    backend = args.backend
+    if args.use_kernel:
+        warnings.warn(
+            "--use-kernel is deprecated; pass --backend pallas",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        backend = "pallas"
     solver, xi = build_solver(
-        args.dataset, args.architecture, args.mode, backend=backend
+        args.dataset, args.architecture, args.mode, backend=backend,
+        settle_chunk=args.settle_chunk,
     )
     policy: Any = args.n_policy
     if policy not in ("pow2", "exact"):
@@ -144,6 +207,7 @@ def main() -> None:
     print(json.dumps(serve_requests(
         solver, xi, args.corruption, args.requests, args.seed,
         batch_buckets=buckets, n_policy=policy, coalesce=not args.no_coalesce,
+        mesh=batch_mesh() if args.shard_batch else None,
     ), indent=1))
 
 
