@@ -1,0 +1,78 @@
+"""Machine-speed calibration for cross-run benchmark comparison.
+
+CI smoke benchmarks run on whatever runner the scheduler hands out; raw
+wall-clock numbers from two machines are not comparable.  Every benchmark
+JSON therefore stamps ``calibration_s`` — the wall time of one fixed,
+compile-cached reference contraction measured on the same machine in the
+same process — and ``benchmarks/check_regression.py`` compares
+*calibration-normalized* wall clocks (metric / calibration) across runs, so
+a slower runner doesn't read as a perf regression and a faster one doesn't
+hide a real one.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Reference-contraction operand size: big enough that dispatch overhead is
+#: a small fraction on a laptop-class CPU, small enough to stay ~ms.
+_REF_DIM = 512
+
+
+@jax.jit
+def _reference_contraction(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b)
+
+
+def calibrate(trials: int = 7) -> float:
+    """Best-of-``trials`` seconds for the fixed reference contraction.
+
+    Benchmarks should sample this *twice* — once before and once after the
+    timed section — and stamp the min (``window`` below): machine load can
+    shift mid-run, and best-of-N metric timings pair with the best machine
+    speed seen in the same window, not a single-moment sample.
+    """
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((_REF_DIM, _REF_DIM)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((_REF_DIM, _REF_DIM)), jnp.float32)
+    jax.block_until_ready(_reference_contraction(a, b))  # compile + warm
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(_reference_contraction(a, b))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class window:
+    """Calibration sampler for one benchmark run.
+
+    ``with calibration.window() as cal:`` samples the reference contraction
+    at entry and exit; ``cal.sample()`` adds a sample wherever called (cheap
+    — one warm contraction, best of a few trials); ``cal()`` returns the
+    fastest sample seen, the whole-run machine-speed stamp.
+
+    Machine load shifts *within* a run, so benchmarks additionally stamp a
+    per-row ``calibration_s`` — ``min(cal.sample() before, after)`` around
+    each row's timings — pairing every best-of-trials metric with the
+    machine speed measured next to it in time, not minutes away.
+    """
+
+    def __enter__(self):
+        self._samples = [calibrate()]
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._samples.append(calibrate())
+
+    def sample(self, trials: int = 5) -> float:
+        s = calibrate(trials)
+        self._samples.append(s)
+        return s
+
+    def __call__(self) -> float:
+        return min(self._samples)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import calibration
 from repro.core import dynamics
 from repro.core.learning import diederich_opper_i
 from repro.core.quantization import quantize_weights
@@ -100,7 +101,7 @@ def bench_size(n: int, batch: int, trials: int, seed: int = 0) -> Dict[str, Any]
 
 
 def main(smoke: bool = False, out: Optional[str] = None) -> List[Dict]:
-    trials = 3 if smoke else 7
+    trials = 5 if smoke else 7
     batch = 16 if smoke else 32
     rows = []
     print("# batched dynamics: early exit vs fixed scan, batched vs vmap-of-run")
@@ -108,16 +109,24 @@ def main(smoke: bool = False, out: Optional[str] = None) -> List[Dict]:
         "n,batch,mean_settle_cycles,early_exit_s,fixed_scan_s,early_exit_speedup,"
         "vmap_run_s,batched_vs_vmap_speedup,retrieve_vs_vmap_speedup"
     )
-    for n in SIZES:
-        r = bench_size(n, batch, trials)
-        rows.append(r)
-        print(
-            f"{r['n']},{r['batch']},{r['mean_settle_cycles']},{r['early_exit_s']},"
-            f"{r['fixed_scan_s']},{r['early_exit_speedup']},{r['vmap_run_s']},"
-            f"{r['batched_vs_vmap_speedup']},{r['retrieve_vs_vmap_speedup']}"
-        )
+    with calibration.window() as cal:
+        for n in SIZES:
+            before = cal.sample()
+            r = bench_size(n, batch, trials)
+            r["calibration_s"] = min(before, cal.sample())
+            rows.append(r)
+            print(
+                f"{r['n']},{r['batch']},{r['mean_settle_cycles']},{r['early_exit_s']},"
+                f"{r['fixed_scan_s']},{r['early_exit_speedup']},{r['vmap_run_s']},"
+                f"{r['batched_vs_vmap_speedup']},{r['retrieve_vs_vmap_speedup']}"
+            )
     if out:
-        payload = {"bench": "dynamics", "smoke": smoke, "rows": rows}
+        payload = {
+            "bench": "dynamics",
+            "smoke": smoke,
+            "calibration_s": cal(),
+            "rows": rows,
+        }
         with open(out, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {out}")

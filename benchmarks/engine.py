@@ -22,9 +22,9 @@ import time
 from typing import Any, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import calibration
 from repro import engine as engine_lib
 from repro.core import dynamics
 from repro.core.ising import random_graph
@@ -103,18 +103,22 @@ def main(smoke: bool = False, out: Optional[str] = None, requests: Optional[int]
     rows = []
     print("# engine throughput vs bucket policy (mixed retrieval + max-cut stream)")
     print("policy,requests,lanes,wall_s,requests_per_s,lanes_per_s,slabs,pad_fraction,retrieve_traces")
-    for name in POLICIES:
-        r = run_policy(name, stream, xi_small, xi_large, sweeps)
-        rows.append(r)
-        print(
-            f"{r['policy']},{r['requests']},{r['lanes']},{r['wall_s']},"
-            f"{r['requests_per_s']},{r['lanes_per_s']},{r['slabs']},"
-            f"{r['pad_fraction']},{r['retrieve_traces']}"
-        )
+    with calibration.window() as cal:
+        for name in POLICIES:
+            before = cal.sample()
+            r = run_policy(name, stream, xi_small, xi_large, sweeps)
+            r["calibration_s"] = min(before, cal.sample())
+            rows.append(r)
+            print(
+                f"{r['policy']},{r['requests']},{r['lanes']},{r['wall_s']},"
+                f"{r['requests_per_s']},{r['lanes_per_s']},{r['slabs']},"
+                f"{r['pad_fraction']},{r['retrieve_traces']}"
+            )
     if out:
         payload = {
             "bench": "engine",
             "smoke": smoke,
+            "calibration_s": cal(),
             "requests": n_requests,
             "rows": rows,
         }

@@ -1,0 +1,175 @@
+"""Hybrid serialized-MAC backend: the serialization/parallelism trade-off.
+
+The paper's headline architecture serializes each oscillator's coupling sum
+through a MAC, trading oscillation frequency for near-linear (~1.2) hardware
+scaling.  ``backend="hybrid"`` computes with that datapath; this benchmark
+sweeps the MAC width P ∈ {1, 8, 32, N} at the paper's design sizes
+(N = 48 recurrent capacity, 506 hybrid capacity) plus the serving bucket
+128, and measures both sides of the trade:
+
+* **software** — wall clock of one phase-update cycle (the ``lax.scan``
+  over ceil(N/P) MAC passes) and of a full early-exit ``retrieve``, next to
+  the fully parallel backend's cycle time;
+* **hardware model** — the P-aware ``core.hardware_model`` oscillation
+  frequency, time-to-solution, and LUT/DSP cost of the same design point,
+  so the measured serialization curve sits beside the paper's model curve.
+
+Every row asserts bit-exactness of the hybrid solve against the parallel
+backend before timing anything.
+
+  PYTHONPATH=src python -m benchmarks.hybrid_scaling                  # full
+  PYTHONPATH=src python -m benchmarks.hybrid_scaling --smoke --out BENCH_hybrid.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import calibration
+from repro.core import dynamics
+from repro.core import hardware_model as hw
+from repro.core.learning import diederich_opper_i
+from repro.core.quantization import quantize_weights
+
+SIZES = (48, 128, 506)
+MAX_CYCLES = 100
+
+
+def p_values(n: int) -> List[int]:
+    """The sweep P ∈ {1, 8, 32, N}, deduplicated and clamped to N."""
+    return sorted({p for p in (1, 8, 32, n) if p <= n})
+
+
+def _instance(n: int, batch: int, seed: int, corruption: float = 0.15):
+    """A fast-settling retrieval instance (DO-I couplings on random patterns)."""
+    rng = np.random.default_rng(seed)
+    p = max(2, n // 12)
+    xi = jnp.asarray(rng.choice([-1, 1], (p, n)), jnp.int8)
+    qw = quantize_weights(diederich_opper_i(xi).weights, bits=5)
+    targets = xi[rng.integers(0, p, batch)]
+    flips = jnp.asarray(rng.random((batch, n)) < corruption)
+    sigma0 = jnp.where(flips, -targets, targets).astype(jnp.int8)
+    return qw.values, sigma0
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _one_cycle(cfg: dynamics.ONNConfig, params: dynamics.OnnParams, phase: jax.Array):
+    return dynamics.functional_update(cfg, params, phase)
+
+
+def _time(fn, trials: int) -> float:
+    fn()  # warmup: compile + first dispatch
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _assert_bit_exact(res, ref, n: int, p: int) -> None:
+    for field in ref._fields:
+        got, want = np.asarray(getattr(res, field)), np.asarray(getattr(ref, field))
+        if not np.array_equal(got, want):
+            raise AssertionError(
+                f"hybrid backend diverged from parallel at N={n}, P={p}, "
+                f"field {field!r}"
+            )
+
+
+def bench_point(n: int, p: int, batch: int, trials: int, seed: int = 0) -> Dict[str, Any]:
+    w, sigma0 = _instance(n, batch, seed)
+    cfg_h = dynamics.ONNConfig(
+        n=n, backend="hybrid", parallel_factor=p, max_cycles=MAX_CYCLES
+    )
+    cfg_p = dynamics.ONNConfig(n=n, max_cycles=MAX_CYCLES)
+    params = dynamics.make_params(cfg_h, w)
+    phase0 = dynamics.initial_phase(cfg_h, sigma0)
+
+    _assert_bit_exact(
+        dynamics.retrieve(cfg_h, params, sigma0),
+        dynamics.retrieve(cfg_p, params, sigma0),
+        n,
+        p,
+    )
+
+    cycle_s = _time(lambda: _one_cycle(cfg_h, params, phase0), trials)
+    parallel_cycle_s = _time(lambda: _one_cycle(cfg_p, params, phase0), trials)
+    retrieve_s = _time(lambda: dynamics.retrieve(cfg_h, params, sigma0), trials)
+
+    res = hw.hybrid_resources(n, parallel=p)
+    f_osc = hw.oscillation_frequency("hybrid", n, parallel=p)
+    return {
+        "n": n,
+        "parallel": p,
+        "passes": cfg_h.hybrid_passes,
+        "batch": batch,
+        "cycle_s": round(cycle_s, 6),
+        "parallel_cycle_s": round(parallel_cycle_s, 6),
+        "serialization_slowdown": round(cycle_s / parallel_cycle_s, 2),
+        "retrieve_s": round(retrieve_s, 5),
+        "model_f_osc_hz": round(f_osc, 1),
+        "model_tts_s": round(MAX_CYCLES / f_osc, 6),
+        "model_lut": res["lut"],
+        "model_dsp": res["dsp"],
+        "model_fits": hw.fits("hybrid", n, parallel=p),
+    }
+
+
+def main(smoke: bool = False, out: Optional[str] = None) -> List[Dict]:
+    trials = 5 if smoke else 7
+    batch = 8 if smoke else 32
+    rows = []
+    print("# hybrid serialized-MAC backend: P sweep (software vs hardware model)")
+    print(
+        "n,parallel,passes,cycle_s,parallel_cycle_s,serialization_slowdown,"
+        "retrieve_s,model_f_osc_hz,model_tts_s,model_lut,model_dsp,model_fits"
+    )
+    with calibration.window() as cal:
+        for n in SIZES:
+            for p in p_values(n):
+                before = cal.sample()
+                r = bench_point(n, p, batch, trials)
+                r["calibration_s"] = min(before, cal.sample())
+                rows.append(r)
+                print(
+                    f"{r['n']},{r['parallel']},{r['passes']},{r['cycle_s']},"
+                    f"{r['parallel_cycle_s']},{r['serialization_slowdown']},"
+                    f"{r['retrieve_s']},{r['model_f_osc_hz']},{r['model_tts_s']},"
+                    f"{r['model_lut']},{r['model_dsp']},{r['model_fits']}"
+                )
+    # The headline check: the model's LUT curve at P=1 stays near-linear
+    # (paper Fig 9: ~N^1.22), far below the recurrent quadratic.
+    slope, r2 = hw.loglog_slope(
+        SIZES, [hw.hybrid_resources(n, parallel=1)["lut"] for n in SIZES]
+    )
+    print(f"# model LUT scaling at P=1: N^{slope:.2f} (r²={r2:.3f})")
+    if out:
+        payload = {
+            "bench": "hybrid",
+            "smoke": smoke,
+            "calibration_s": cal(),
+            "lut_slope_p1": round(slope, 3),
+            "rows": rows,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small trial counts (CI)")
+    ap.add_argument("--out", default="BENCH_hybrid.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None)

@@ -9,8 +9,10 @@ Everything a caller needs rides on three ideas:
   instances, one executable), sharding, and donation.
 
 * **One backend table.**  ``ONNConfig.backend`` ∈ {"parallel", "serial",
-  "pallas"} picks the weighted-sum schedule for *both* functional and rtl
-  modes; all three are bit-exact.
+  "pallas", "hybrid"} picks the weighted-sum schedule for *both* functional
+  and rtl modes; all are bit-exact.  ``hybrid`` is the cycle-faithful
+  serialized-MAC datapath of the paper's headline architecture
+  (``parallel_factor`` sets the MAC width P; ceil(N/P) passes per cycle).
 
 * **One solver surface.**  A ``Solver`` maps a problem instance to a result
   under an explicit PRNG key.  ``RetrievalSolver`` (batched associative

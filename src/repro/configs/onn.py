@@ -15,7 +15,6 @@ replicated per row shard.
 
 from __future__ import annotations
 
-import dataclasses
 
 from repro.core.onn import ONNConfig
 

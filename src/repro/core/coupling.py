@@ -88,11 +88,14 @@ def adders_required_serial(n: int) -> int:
     return n
 
 
-def serialization_factor(n: int, overhead_clocks: int = 2) -> int:
+def serialization_factor(n: int, overhead_clocks: int = 2, parallel: int = 1) -> int:
     """Fast-clock cycles needed per slow-clock phase update (paper §3).
 
-    The fast clock must run at least N times the phase-update clock (one
-    coupling value per fast edge) plus a small control overhead (reset and
-    result-hold registration).
+    With ``parallel`` MAC lanes per oscillator (P coupling values consumed
+    per fast edge) the counter walks ``ceil(N / P)`` passes, plus a small
+    control overhead (reset and result-hold registration).  ``parallel=1``
+    is the paper's single-MAC hybrid: N + overhead fast clocks.
     """
-    return n + overhead_clocks
+    if parallel <= 0:
+        raise ValueError(f"parallel must be positive, got {parallel}")
+    return -(-n // parallel) + overhead_clocks

@@ -32,8 +32,18 @@ both modes:
 * ``pallas``   — the blocked TPU kernel (``repro.kernels``), interpret mode
   on CPU.  In functional mode the full cycle is one fused kernel launch
   (int8 matmul + bias + phase-align epilogue over the real batch grid).
+* ``hybrid``   — the cycle-faithful emulation of the paper's hybrid
+  coupling datapath: the N×N coupling is serialized into
+  ``ceil(N / parallel_factor)`` passes of ``parallel_factor``-wide integer
+  MACs over int8-carried weights (``hybrid_mac_sum``).  ``parallel_factor``
+  (P) is the architecture's parallelism knob: P=1 is the paper's single-MAC
+  hybrid, P=N degenerates to the recurrent parallel schedule.
+  ``hybrid_impl`` selects the execution route: ``"scan"`` (the
+  ``lax.scan`` reference below) or ``"pallas"`` (the blocked pass-group
+  kernels in ``repro.kernels`` — one launch per pass-group, real batch
+  grid).
 
-All three are bit-exact (integer associativity); spins are ±1 ``int8``,
+All backends are bit-exact (integer associativity); spins are ±1 ``int8``,
 weights ``weight_bits``-bit signed carried in ``int8``, sums exact ``int32``.
 
 Batched-native solve (``run_batch`` / ``retrieve``): the serving hot path is
@@ -61,7 +71,14 @@ from repro.core import coupling as coupling_lib
 from repro.core import oscillator as osc
 from repro.core.quantization import check_weight_range
 
-_BACKEND_NAMES = ("parallel", "serial", "pallas")
+_BACKEND_NAMES = ("parallel", "serial", "pallas", "hybrid")
+_HYBRID_IMPLS = ("scan", "pallas")
+
+#: Auto ``parallel_factor`` (P) for ``backend="hybrid"`` when the config
+#: leaves it 0: wide enough that the serialized schedule is usable in
+#: software, small enough that the serialization is real (ceil(N/P) > 1 for
+#: every N above the paper's recurrent capacity point).
+DEFAULT_PARALLEL_FACTOR = 32
 
 #: Traces per public entry point, incremented at trace (not call) time.
 #: Tests assert "two same-shape weight matrices, one compile" against this.
@@ -85,9 +102,21 @@ class ONNConfig:
     mode: str = "functional"  # "functional" | "rtl"
     max_cycles: int = 100
     sync_jitter: bool = False  # randomize enable-signal offset (rtl hybrid)
-    backend: str = "parallel"  # "parallel" | "serial" | "pallas"
+    backend: str = "parallel"  # "parallel" | "serial" | "pallas" | "hybrid"
     serial_chunk: int = 0  # block size for backend="serial" (0 → auto)
     use_kernel: bool = False  # deprecated: alias for backend="pallas"
+    #: Parallelism P of the ``hybrid`` backend: the coupling sum is computed
+    #: in ``ceil(n / P)`` serialized passes of P-wide integer MACs (the
+    #: paper's serialized-MAC datapath with P parallel coupling elements).
+    #: P=1 is the paper's single-MAC hybrid, P=n is one pass (the recurrent
+    #: parallel schedule).  0 → auto (``DEFAULT_PARALLEL_FACTOR``, clamped
+    #: to n).  Setting it with ``backend="parallel"`` selects ``hybrid``.
+    parallel_factor: int = 0
+    #: Execution route of the hybrid backend: ``"scan"`` — the ``lax.scan``
+    #: pass-by-pass reference (``hybrid_mac_sum``); ``"pallas"`` — the
+    #: blocked pass-group kernels (``repro.kernels.ops``), one launch per
+    #: pass-group with the real batch grid.  Bit-exact either way.
+    hybrid_impl: str = "scan"
     #: Cycles simulated between early-exit checks of the batched solve
     #: (``run_batch``/``retrieve``).  Every ``settle_chunk`` cycles the
     #: while-loop tests whether all lanes have frozen (settled, or in a
@@ -129,15 +158,71 @@ class ONNConfig:
             object.__setattr__(self, "backend", "pallas")
             object.__setattr__(self, "use_kernel", False)
         elif self.backend == "parallel" and self.serial_chunk > 0:
+            if self.parallel_factor > 0:
+                raise ValueError(
+                    "serial_chunk>0 and parallel_factor>0 are contradictory "
+                    "route flags; pick backend='serial' or backend='hybrid' "
+                    "explicitly"
+                )
             object.__setattr__(self, "backend", "serial")
+        elif self.backend == "parallel" and self.parallel_factor > 0:
+            object.__setattr__(self, "backend", "hybrid")
         if self.backend not in _BACKEND_NAMES:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected one of {_BACKEND_NAMES}"
             )
+        if self.parallel_factor < 0:
+            raise ValueError(
+                f"parallel_factor must be >= 0, got {self.parallel_factor}"
+            )
+        if self.hybrid_impl not in _HYBRID_IMPLS:
+            raise ValueError(
+                f"unknown hybrid_impl {self.hybrid_impl!r}; expected one of "
+                f"{_HYBRID_IMPLS}"
+            )
+        if self.backend != "serial" and self.serial_chunk > 0:
+            # Same rule as parallel_factor/hybrid_impl below: a schedule knob
+            # on a backend that ignores it is a config mistake, and the dead
+            # field would fork jit cache keys.
+            raise ValueError(
+                f"serial_chunk={self.serial_chunk} only applies to "
+                f'backend="serial", not {self.backend!r}'
+            )
+        if self.backend != "hybrid":
+            # parallel_factor / hybrid_impl parameterize only the hybrid
+            # schedule; a non-default value on another backend is a config
+            # mistake, not a silent no-op (and would fork jit cache keys).
+            if self.parallel_factor > 0:
+                raise ValueError(
+                    f"parallel_factor={self.parallel_factor} only applies to "
+                    f'backend="hybrid", not {self.backend!r}'
+                )
+            if self.hybrid_impl != "scan":
+                raise ValueError(
+                    f"hybrid_impl={self.hybrid_impl!r} only applies to "
+                    f'backend="hybrid", not {self.backend!r}'
+                )
 
     @property
     def clocks_per_cycle(self) -> int:
         return 1 << self.phase_bits
+
+    @property
+    def hybrid_parallel(self) -> int:
+        """Resolved parallelism P of the hybrid schedule (clamped to n).
+
+        ``pad_config`` freezes this resolved value before growing ``n``, so
+        bucketing a hybrid instance never widens the datapath — padding adds
+        idle passes over zero columns, not MAC lanes.
+        """
+        p = self.parallel_factor if self.parallel_factor > 0 else DEFAULT_PARALLEL_FACTOR
+        return min(p, self.n)
+
+    @property
+    def hybrid_passes(self) -> int:
+        """Serialized MAC passes per phase update: ``ceil(n / P)``."""
+        p = self.hybrid_parallel
+        return -(-self.n // p)
 
 
 class OnnParams(NamedTuple):
@@ -226,9 +311,19 @@ def validate_weights(weights: jax.Array, bits: int) -> None:
 
 
 def pad_config(cfg: ONNConfig, n_to: int) -> ONNConfig:
-    """The same config at a bucketed oscillator count ``n_to`` ≥ cfg.n."""
+    """The same config at a bucketed oscillator count ``n_to`` ≥ cfg.n.
+
+    The hybrid backend's resolved MAC width is frozen before growing ``n``:
+    an auto (0) or clamped ``parallel_factor`` re-resolved at the padded
+    size would widen the datapath, so the bucketed solve would run a
+    different serialized schedule than the one configured, quoted by
+    ``cost_units`` and modeled by ``fpga_seconds``.  Padding therefore only
+    adds idle passes over zero columns, never MAC lanes.
+    """
     if n_to < cfg.n:
         raise ValueError(f"pad_config: n_to={n_to} < cfg.n={cfg.n}")
+    if cfg.backend == "hybrid":
+        return dataclasses.replace(cfg, n=n_to, parallel_factor=cfg.hybrid_parallel)
     return dataclasses.replace(cfg, n=n_to)
 
 
@@ -285,10 +380,64 @@ def _pallas_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
     return kernel_ops.coupling_sum(w, sigma)
 
 
+def hybrid_mac_sum(w: jax.Array, sigma: jax.Array, parallel: int) -> jax.Array:
+    """Cycle-faithful serialized-MAC coupling sum (the hybrid datapath).
+
+    The ``lax.scan`` reference of the hybrid backend: the N-element input of
+    every oscillator row is consumed in ``ceil(N / parallel)`` passes, each
+    pass feeding ``parallel`` int8-carried weights and spins into a P-wide
+    MAC whose int32 accumulator is the scan carry — the executable model of
+    the paper's serialized coupling element generalized from one MAC (P=1)
+    to P parallel MAC lanes.  When ``parallel`` does not divide N the final
+    pass runs with zero-padded lanes (the hardware's idle MAC elements on
+    the ragged tail), which leaves the integer sum unchanged, so the result
+    is bit-exact with :func:`repro.core.coupling.weighted_sum_parallel` for
+    every P — at P=N the single pass *is* the parallel schedule.
+
+    ``w``: (N, N) int8; ``sigma``: (..., N) int8 in {−1, +1} → (..., N) int32.
+    """
+    if parallel <= 0:
+        raise ValueError(f"parallel must be positive, got {parallel}")
+    n_rows, n = w.shape
+    passes = -(-n // parallel)
+    pad = passes * parallel - n
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+        sigma = jnp.pad(sigma, [(0, 0)] * (sigma.ndim - 1) + [(0, pad)])
+    # (passes, N, P) weight slices / (passes, ..., P) spin slices: pass k
+    # streams columns [k·P, (k+1)·P) of every row through the MACs.
+    w_passes = (
+        w.astype(jnp.int32).reshape(n_rows, passes, parallel).transpose(1, 0, 2)
+    )
+    s_passes = jnp.moveaxis(
+        sigma.astype(jnp.int32).reshape(*sigma.shape[:-1], passes, parallel), -2, 0
+    )
+
+    def mac_pass(acc, slices):
+        wp, sp = slices  # (N, P), (..., P)
+        return (
+            acc + jnp.einsum("ip,...p->...i", wp, sp, preferred_element_type=jnp.int32),
+            None,
+        )
+
+    acc0 = jnp.zeros((*sigma.shape[:-1], n_rows), jnp.int32)
+    acc, _ = jax.lax.scan(mac_pass, acc0, (w_passes, s_passes))
+    return acc
+
+
+def _hybrid_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
+    if cfg.hybrid_impl == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
+
+        return kernel_ops.hybrid_coupling_sum(w, sigma, parallel=cfg.hybrid_parallel)
+    return hybrid_mac_sum(w, sigma, cfg.hybrid_parallel)
+
+
 BACKENDS = {
     "parallel": _parallel_sum,
     "serial": _serial_sum,
     "pallas": _pallas_sum,
+    "hybrid": _hybrid_sum,
 }
 
 
@@ -327,6 +476,18 @@ def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> ja
         half = osc.n_positions(cfg.phase_bits) // 2
         return kernel_ops.phase_step(
             params.weights, sigma, params.bias, phase, half=half
+        )
+    if cfg.backend == "hybrid" and cfg.hybrid_impl == "pallas":
+        from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
+
+        half = osc.n_positions(cfg.phase_bits) // 2
+        return kernel_ops.hybrid_phase_step(
+            params.weights,
+            sigma,
+            params.bias,
+            phase,
+            half=half,
+            parallel=cfg.hybrid_parallel,
         )
     s = weighted_sum(cfg, params.weights, sigma) + params.bias
     return osc.phase_align(phase, s, cfg.phase_bits)

@@ -93,22 +93,41 @@ def recurrent_resources(n: int, bits: BitConfig = BitConfig()) -> Dict[str, int]
     return {"lut": int(round(lut)), "ff": int(round(ff)), "dsp": 0, "bram": 0}
 
 
-def hybrid_resources(n: int, bits: BitConfig = BitConfig()) -> Dict[str, int]:
+def _check_parallel(n: int, parallel: int) -> int:
+    if parallel <= 0:
+        raise ValueError(f"parallel must be positive, got {parallel}")
+    return min(parallel, n)
+
+
+def hybrid_resources(
+    n: int, bits: BitConfig = BitConfig(), parallel: int = 1
+) -> Dict[str, int]:
     """LUT/FF/DSP/BRAM of the hybrid (serialized MAC) architecture.
 
-    Structure per oscillator: one accumulating adder (acc_width bits, mapped
-    with the multiplier into DSP slices, SIMD-packed), an N:1 single-bit
-    amplitude multiplexer (LUT6 ⇒ ~N/64 LUTs at scale), an address counter
-    (log2 N bits), weight storage in BRAM (port-limited), plus control.
+    Structure per oscillator: ``parallel`` accumulating MAC lanes (acc_width
+    bits, mapped with the multipliers into DSP slices, SIMD-packed), an N:1
+    single-bit amplitude multiplexer (LUT6 ⇒ ~N/64 LUTs at scale), an
+    address counter (log2 N bits), weight storage in BRAM (port-limited:
+    P reads per fast clock per row), plus control.  ``parallel`` is the
+    datapath width P of ``ONNConfig.parallel_factor``: P=1 is the paper's
+    single-MAC design (Table 4 pins this endpoint exactly); larger P adds
+    DSP/BRAM-port cost ∝ N·P plus a (P−1)-adder reduction tree per row
+    (costed at the recurrent model's per-adder-bit rate, so P→N recovers
+    the recurrent adder-tree scaling).
     """
     w = bits.weight_bits
     acc = _acc_width(n, w)
     addr = max(1, math.ceil(math.log2(n)))
+    p = _check_parallel(n, parallel)
+    macs = n * p
     lut = n * (
         2.0 * acc  # accumulator + sign/compare logic outside the DSP
         + _HA_LUT_MUX_COEF * math.ceil(n / 64)  # N:1 amplitude mux (LUT6 tree + routing)
         + addr  # address decode
         + _HA_LUT_CONTROL_PER_OSC
+        # P-wide MAC reduction tree: (P − 1) adders per row, mean width as
+        # in the recurrent adder-tree model (zero at the paper's P=1).
+        + (p - 1) * ((w + acc) / 2.0) * _RA_LUT_PER_ADDER_BIT
     )
     ff = n * (
         bits.registers_per_oscillator  # circular shift register
@@ -116,48 +135,66 @@ def hybrid_resources(n: int, bits: BitConfig = BitConfig()) -> Dict[str, int]:
         + addr  # fast-clock counter
         + (acc + 1)  # result-hold register
         + _HA_FF_CONTROL_PER_OSC  # CDC synchronizers, control FSM
+        + (p - 1) * _RA_FF_PER_ADDER  # reduction-tree pipeline registers
     )
     # The epsilon keeps an exact ratio (506 / 2.3 = 220) from rounding up a
     # slice on float error — Table 4's 220 DSPs is the binding budget at 506.
-    dsp = math.ceil(n / _HA_MACS_PER_DSP - 1e-9)
-    bram_ports = math.ceil(n / _HA_MACS_PER_BRAM - 1e-9)
+    dsp = math.ceil(macs / _HA_MACS_PER_DSP - 1e-9)
+    bram_ports = math.ceil(macs / _HA_MACS_PER_BRAM - 1e-9)
     bram_capacity = math.ceil(n * n * w / 36_864)  # BRAM36 = 36 kib
     bram = max(bram_ports, bram_capacity)
     return {"lut": int(round(lut)), "ff": int(round(ff)), "dsp": dsp, "bram": bram}
 
 
-def resources(arch: str, n: int, bits: BitConfig = BitConfig()) -> Dict[str, int]:
+def resources(
+    arch: str, n: int, bits: BitConfig = BitConfig(), parallel: int = 1
+) -> Dict[str, int]:
     if arch == "recurrent":
         return recurrent_resources(n, bits)
     if arch == "hybrid":
-        return hybrid_resources(n, bits)
+        return hybrid_resources(n, bits, parallel)
     raise ValueError(f"unknown architecture {arch!r}")
 
 
-def oscillation_frequency(arch: str, n: int, bits: BitConfig = BitConfig()) -> float:
-    """Oscillation frequency in Hz at network size N (paper Fig 11, Table 5)."""
+def oscillation_frequency(
+    arch: str, n: int, bits: BitConfig = BitConfig(), parallel: int = 1
+) -> float:
+    """Oscillation frequency in Hz at network size N (paper Fig 11, Table 5).
+
+    ``parallel`` (hybrid only) is the MAC width P: each phase update costs
+    ``ceil(N / P) + overhead`` fast clocks, so widening the datapath buys
+    oscillation frequency at the resource cost ``hybrid_resources`` models.
+    """
     if arch == "recurrent":
         return _RA_OSC_F0 * n**_RA_FREQ_SLOPE
     if arch == "hybrid":
         # fast-clock fmax degrades with design size; each phase update costs
-        # (N + overhead) fast clocks; a period is 2**phase_bits updates.
+        # (ceil(N/P) + overhead) fast clocks; a period is 2**phase_bits updates.
+        p = _check_parallel(n, parallel)
         fmax = _HA_FMAX_REF * (506.0 / n) ** (-_HA_FMAX_SLOPE)
         updates_per_period = 1 << bits.phase_bits
-        return fmax / (updates_per_period * (n + _HA_SERIAL_OVERHEAD))
+        passes = -(-n // p)
+        return fmax / (updates_per_period * (passes + _HA_SERIAL_OVERHEAD))
     raise ValueError(f"unknown architecture {arch!r}")
 
 
 def time_to_solution(
-    arch: str, n: int, cycles: float, bits: BitConfig = BitConfig()
+    arch: str,
+    n: int,
+    cycles: float,
+    bits: BitConfig = BitConfig(),
+    parallel: int = 1,
 ) -> float:
     """Seconds the FPGA design needs for ``cycles`` oscillation cycles.
 
     The paper's time-to-solution currency (Table 7 reports settle *cycles*;
-    wall time is cycles / f_osc).  ``repro.engine`` quotes this next to its
-    own software estimates so every served request carries the hardware
-    trade-study context (fast-but-small recurrent vs slow-but-large hybrid).
+    wall time is cycles / f_osc).  ``parallel`` threads the hybrid MAC
+    width P through (P=1 — the paper's design — for recurrent or default).
+    ``repro.engine`` quotes this next to its own software estimates so every
+    served request carries the hardware trade-study context (fast-but-small
+    recurrent vs slow-but-large hybrid, interpolated by P).
     """
-    return cycles / oscillation_frequency(arch, n, bits)
+    return cycles / oscillation_frequency(arch, n, bits, parallel)
 
 
 # Place-and-route stops short of 100 % LUT utilization (paper Table 4: the
@@ -166,34 +203,45 @@ def time_to_solution(
 _ROUTE_CEILING = {"lut": 0.93, "ff": 1.0, "dsp": 1.0, "bram": 1.0}
 
 
-def fits(arch: str, n: int, bits: BitConfig = BitConfig(), budget=None) -> bool:
+def fits(
+    arch: str, n: int, bits: BitConfig = BitConfig(), budget=None, parallel: int = 1
+) -> bool:
     budget = budget or ZYNQ_7020
-    r = resources(arch, n, bits)
+    r = resources(arch, n, bits, parallel)
     return all(
         r[k] <= budget[k] * _ROUTE_CEILING[k] for k in ("lut", "ff", "dsp", "bram")
     )
 
 
-def max_oscillators(arch: str, bits: BitConfig = BitConfig(), budget=None) -> int:
-    """Largest N that fits the FPGA budget (paper Table 5: 48 vs 506)."""
+def max_oscillators(
+    arch: str, bits: BitConfig = BitConfig(), budget=None, parallel: int = 1
+) -> int:
+    """Largest N that fits the FPGA budget (paper Table 5: 48 vs 506).
+
+    ``parallel`` > 1 trades hybrid capacity for oscillation frequency: the
+    P-wide datapath burns DSP/BRAM ports ∝ N·P, pulling the capacity point
+    down from 506 toward the recurrent regime.
+    """
     budget = budget or ZYNQ_7020
     lo, hi = 1, 1
-    while fits(arch, hi, bits, budget):
+    while fits(arch, hi, bits, budget, parallel):
         lo, hi = hi, hi * 2
         if hi > 1 << 20:
             break
     while lo + 1 < hi:
         mid = (lo + hi) // 2
-        if fits(arch, mid, bits, budget):
+        if fits(arch, mid, bits, budget, parallel):
             lo = mid
         else:
             hi = mid
     return lo
 
 
-def utilization(arch: str, n: int, bits: BitConfig = BitConfig(), budget=None) -> Dict[str, float]:
+def utilization(
+    arch: str, n: int, bits: BitConfig = BitConfig(), budget=None, parallel: int = 1
+) -> Dict[str, float]:
     budget = budget or ZYNQ_7020
-    r = resources(arch, n, bits)
+    r = resources(arch, n, bits, parallel)
     return {k: r[k] / budget[k] for k in ("lut", "ff", "dsp", "bram")}
 
 

@@ -10,7 +10,6 @@ for studying the memory-bound regime — the TPU analogue of the paper's
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -208,22 +208,63 @@ class RetrievalEngineSolver:
             "expected_cycles": round(self.expected_cycles(block=True), 3),
         }
 
+    def _hybrid_parallel(self) -> int:
+        """MAC width P of the configured datapath (1 off the hybrid backend)."""
+        cfg = self.config
+        return cfg.hybrid_parallel if cfg.backend == "hybrid" else 1
+
     def cost_units(self, bucket_sig: int, batch_bucket: int) -> float:
         cfg = self.config
-        per_cycle = bucket_sig * bucket_sig
+        if cfg.backend == "hybrid":
+            # The serialized schedule charges the full pass grid, idle ragged-
+            # tail MAC lanes included: ceil(N/P) passes of P lanes per row.
+            p = min(cfg.hybrid_parallel, bucket_sig)
+            per_cycle = bucket_sig * (-(-bucket_sig // p)) * p
+        else:
+            per_cycle = bucket_sig * bucket_sig
         cycles = self.expected_cycles() * (
             cfg.clocks_per_cycle if cfg.mode == "rtl" else 1
         )
         return float(batch_bucket) * per_cycle * cycles
 
+    def _bits(self) -> hw.BitConfig:
+        return hw.BitConfig(self.config.weight_bits, self.config.phase_bits)
+
     def fpga_seconds(self, bucket_sig: int) -> Optional[float]:
-        # The paper hardware runs the *unpadded* instance; quote its design.
+        # The paper hardware runs the *unpadded* instance; quote its design
+        # at the configured serialized-MAC width (P=1 unless backend=hybrid).
         return hw.time_to_solution(
             self.config.architecture,
             self.config.n,
             self.config.max_cycles,
-            hw.BitConfig(self.config.weight_bits, self.config.phase_bits),
+            self._bits(),
+            parallel=self._hybrid_parallel(),
         )
+
+    def fpga_tradeoff(self, bucket_sig: int) -> Dict[str, Optional[float]]:
+        """Per-design hardware quotes for this instance (paper Table 5 trade).
+
+        Labels map to time-to-solution seconds, or None when the design does
+        not fit the FPGA budget at this N — so every request shows the
+        fast-but-small recurrent against the slow-but-large hybrid, plus the
+        configured P-wide hybrid when the backend serializes.
+        """
+        cfg, bits, n = self.config, self._bits(), self.config.n
+        designs: Dict[str, Tuple[str, int]] = {
+            "recurrent": ("recurrent", 1),
+            "hybrid[P=1]": ("hybrid", 1),
+        }
+        p = self._hybrid_parallel()
+        if p > 1:
+            designs[f"hybrid[P={p}]"] = ("hybrid", p)
+        return {
+            label: (
+                hw.time_to_solution(arch, n, cfg.max_cycles, bits, parallel=par)
+                if hw.fits(arch, n, bits, parallel=par)
+                else None
+            )
+            for label, (arch, par) in designs.items()
+        }
 
 
 # ---------------------------------------------------------------------------

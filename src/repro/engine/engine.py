@@ -75,7 +75,13 @@ class EngineSolver(Protocol):
         ...
 
     def fpga_seconds(self, bucket_sig: Hashable) -> Optional[float]:
-        """Paper-hardware time-to-solution context, if the workload maps."""
+        """Paper-hardware time-to-solution context, if the workload maps.
+
+        Adapters may additionally expose ``fpga_tradeoff(bucket_sig)``
+        returning a per-design quote mapping (recurrent vs hybrid at the
+        configured parallel factor); the engine forwards it into
+        :class:`repro.engine.planner.Estimate` when present.
+        """
         ...
 
 
@@ -211,6 +217,7 @@ class Engine:
             (request.workload, bucket_sig, bb),
             units=solver.cost_units(bucket_sig, bb),
             fpga_seconds=solver.fpga_seconds(bucket_sig),
+            fpga_tradeoff=self._fpga_tradeoff(solver, bucket_sig),
         )
         pending = _Pending(
             request=request,
@@ -311,6 +318,12 @@ class Engine:
 
     # -- introspection -----------------------------------------------------
 
+    @staticmethod
+    def _fpga_tradeoff(solver: EngineSolver, bucket_sig: Hashable):
+        """The adapter's per-design hardware quote mapping, when it has one."""
+        tradeoff = getattr(solver, "fpga_tradeoff", None)
+        return tradeoff(bucket_sig) if callable(tradeoff) else None
+
     def estimate(self, workload: str, payload: Any) -> Estimate:
         """Latency quote for a hypothetical request (nothing enqueued)."""
         solver = self.solver(workload)
@@ -320,6 +333,7 @@ class Engine:
             (workload, bucket_sig, bb),
             units=solver.cost_units(bucket_sig, bb),
             fpga_seconds=solver.fpga_seconds(bucket_sig),
+            fpga_tradeoff=self._fpga_tradeoff(solver, bucket_sig),
         )
 
     def stats(self) -> Dict[str, Any]:

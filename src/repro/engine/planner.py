@@ -23,7 +23,7 @@ answers sooner (latency).  This planner makes that choice measurable:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Hashable, Optional, Sequence, Tuple
+from typing import Dict, Hashable, Mapping, Optional, Sequence, Tuple
 
 from repro.engine import bucketing
 
@@ -43,12 +43,21 @@ class Estimate:
     measured settle-cycle EMA (``adapters.RetrievalEngineSolver``) — the
     early-exit batched solve stops when lanes freeze, so quotes tighten
     toward executed work as traffic flows instead of assuming the scan bound.
+
+    ``fpga_tradeoff`` is the paper's architecture trade quoted per request:
+    a mapping of design labels (e.g. ``"recurrent"``, ``"hybrid[P=1]"``,
+    ``"hybrid[P=32]"``) to their hardware time-to-solution in seconds, with
+    ``None`` marking designs that do not fit the FPGA budget at this N —
+    the fast-but-small recurrent vs slow-but-large hybrid choice, made
+    visible next to every software latency quote.
     """
 
     seconds: float
     source: str  # "ema" (measured) | "model" (cost-rate cold start)
     fpga_seconds: Optional[float] = None  # paper-hardware time-to-solution
     units: float = 0.0  # abstract work behind a model quote (0 if unknown)
+    #: Per-design hardware quotes (None value: design does not fit at this N).
+    fpga_tradeoff: Optional[Mapping[str, Optional[float]]] = None
 
 
 class Planner:
@@ -104,18 +113,24 @@ class Planner:
         key: Hashable,
         units: float = 0.0,
         fpga_seconds: Optional[float] = None,
+        fpga_tradeoff: Optional[Mapping[str, Optional[float]]] = None,
     ) -> Estimate:
         """Latency quote for one slab at ``key``: EMA if measured, else model."""
         ema = self._ema_s.get(key)
         if ema is not None:
             return Estimate(
-                seconds=ema, source="ema", fpga_seconds=fpga_seconds, units=units
+                seconds=ema,
+                source="ema",
+                fpga_seconds=fpga_seconds,
+                units=units,
+                fpga_tradeoff=fpga_tradeoff,
             )
         return Estimate(
             seconds=units * self._cost_rate,
             source="model",
             fpga_seconds=fpga_seconds,
             units=units,
+            fpga_tradeoff=fpga_tradeoff,
         )
 
     def snapshot(self) -> Dict[str, object]:

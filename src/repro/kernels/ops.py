@@ -134,6 +134,95 @@ def phase_step(
     return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("parallel", "use_pallas", "block_b", "block_i", "block_k")
+)
+def hybrid_coupling_sum(
+    w: jax.Array,
+    sigma: jax.Array,
+    *,
+    parallel: int,
+    use_pallas: bool = True,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    block_i: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """S = W σ through the hybrid serialized pass-group schedule.
+
+    ``parallel`` is the MAC width P: the contraction serializes into
+    ``ceil(N / P)`` passes, grouped so every kernel launch covers one
+    hardware-aligned pass-group (``repro.kernels.coupling_kernel``).
+    Bit-exact with :func:`coupling_sum` for every P.
+    """
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    n = w.shape[0]
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    if not use_pallas:
+        out = _ref.hybrid_coupling_sum_ref(w, sig2d, parallel)
+    else:
+        bb = _pick_block(sig2d.shape[0], block_b)
+        bi = _pick_block(n, block_i)
+        bk = _pick_block(n, block_k)
+        _, width = _k.hybrid_pass_groups(parallel, bk)
+        sig_p = _k.pad_to_blocks(sig2d, (bb, width))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, width))
+        out = _k.hybrid_coupling_sum_pallas(
+            sig_p, w_p, parallel=parallel, block_b=bb, block_i=bi, block_k=bk,
+            interpret=_interpret(),
+        )[: sig2d.shape[0], :n]
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("half", "parallel", "use_pallas", "block_b", "block_i", "block_k"),
+)
+def hybrid_phase_step(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
+    *,
+    half: int,
+    parallel: int,
+    use_pallas: bool = True,
+    block_b: int = _k.DEFAULT_BLOCK_B,
+    block_i: int = _k.DEFAULT_BLOCK_I,
+    block_k: int = _k.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Fused hybrid functional-mode cycle: θ' = phase-align(W σ + h, θ) with
+    the coupling sum serialized into pass-group launches of MAC width
+    ``parallel``.  Same calling convention as :func:`phase_step`; the
+    batched ONN hot path (backend="hybrid", hybrid_impl="pallas") lands
+    here with the request batch as a real grid dimension.
+    """
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    n = w.shape[0]
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    ph2d = phase.reshape(-1, n).astype(jnp.int32)
+    h = jnp.zeros((n,), jnp.int32) if bias is None else bias.astype(jnp.int32)
+    if not use_pallas:
+        out = _ref.hybrid_phase_step_ref(w, sig2d, h, ph2d, half, parallel)
+    else:
+        bb = _pick_block(sig2d.shape[0], block_b)
+        bi = _pick_block(n, block_i)
+        bk = _pick_block(n, block_k)
+        _, width = _k.hybrid_pass_groups(parallel, bk)
+        sig_p = _k.pad_to_blocks(sig2d, (bb, width))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, width))
+        h_p = _k.pad_to_blocks(h, (bi,))
+        ph_p = _k.pad_to_blocks(ph2d, (bb, bi))
+        out = _k.hybrid_phase_step_pallas(
+            sig_p, w_p, h_p, ph_p,
+            half=half, parallel=parallel,
+            block_b=bb, block_i=bi, block_k=bk, interpret=_interpret(),
+        )[: sig2d.shape[0], :n]
+    out = out.astype(phase.dtype)
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
 def quantized_matvec(
     w_q: jax.Array,

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 # v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12  # bf16
@@ -113,7 +113,6 @@ class CollectiveStats:
 def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
     counts: Dict[str, int] = {}
     byts: Dict[str, float] = {}
-    seen_done = set()
     for line in hlo_text.splitlines():
         m = _OP_RE.search(line)
         if not m:

@@ -15,7 +15,6 @@ cross-pod data parallelism (DESIGN.md §5).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh

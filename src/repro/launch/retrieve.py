@@ -52,6 +52,8 @@ def build_solver(
     max_cycles: int = 100,
     backend: str = "parallel",
     settle_chunk: int = 8,
+    parallel_factor: int = 0,
+    hybrid_impl: str = "scan",
 ) -> Tuple[RetrievalSolver, jax.Array]:
     """Train a solver for one letter dataset; returns (solver, patterns)."""
     xi = pat.load_dataset(dataset)  # (P, N) ±1
@@ -64,6 +66,8 @@ def build_solver(
         max_cycles=max_cycles,
         backend=backend,
         settle_chunk=settle_chunk,
+        parallel_factor=parallel_factor,
+        hybrid_impl=hybrid_impl,
     )
     return solver, xi
 
@@ -171,8 +175,14 @@ def main() -> None:
     ap.add_argument("--corruption", type=float, default=0.25)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--backend", default="parallel",
-                    choices=["parallel", "serial", "pallas"],
+                    choices=["parallel", "serial", "pallas", "hybrid"],
                     help="weighted-sum schedule for the coupling sum")
+    ap.add_argument("--parallel-factor", type=int, default=0,
+                    help="MAC width P of --backend hybrid: the coupling sum "
+                         "serializes into ceil(N/P) passes (0 = auto)")
+    ap.add_argument("--hybrid-impl", default="scan", choices=["scan", "pallas"],
+                    help="execution route of --backend hybrid: lax.scan "
+                         "reference or blocked pass-group Pallas kernels")
     ap.add_argument("--use-kernel", action="store_true",
                     help="deprecated alias for --backend pallas")
     ap.add_argument("--settle-chunk", type=int, default=8,
@@ -198,7 +208,8 @@ def main() -> None:
         backend = "pallas"
     solver, xi = build_solver(
         args.dataset, args.architecture, args.mode, backend=backend,
-        settle_chunk=args.settle_chunk,
+        settle_chunk=args.settle_chunk, parallel_factor=args.parallel_factor,
+        hybrid_impl=args.hybrid_impl,
     )
     policy: Any = args.n_policy
     if policy not in ("pow2", "exact"):

@@ -20,23 +20,18 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
-import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt_lib
 from repro import configs
 from repro import optim as optim_lib
 from repro.data.tokens import TokenStream
 from repro.distributed import ft
-from repro.distributed import sharding as shrules
-from repro.launch.mesh import make_host_mesh
 from repro.models import params as PM
 from repro.models import steps as steps_lib
 from repro.models.model import get_model

@@ -15,7 +15,7 @@ expert_mlp, layers, stack, conv, state, vision, null``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

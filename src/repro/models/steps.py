@@ -281,7 +281,8 @@ def build_cell(
     ``axis_sizes``: mesh axis → size, for divisibility-aware sharding.
     """
     model = get_model(cfg)
-    pspec_of = lambda tree: P.pspecs(tree, rules, axis_sizes)
+    def pspec_of(tree):
+        return P.pspecs(tree, rules, axis_sizes)
     if microbatches == 0:
         microbatches = auto_microbatches(shape, dp_size)
 

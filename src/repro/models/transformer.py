@@ -16,7 +16,6 @@ by its window — the reason it runs the 500k cell at all).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

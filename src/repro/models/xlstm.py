@@ -24,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.params import ParamSpec
-from repro.models.layers import rms_norm
 
 
 class MLSTMCache(NamedTuple):

@@ -16,8 +16,7 @@ chips, Adafactor's ~0 extra does (see EXPERIMENTS.md §Dry-run).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ real CPU device; only launch/dryrun.py (its own process) forces 512
 placeholder devices, and the multi-device test spawns its own subprocess.
 """
 
-import pytest
 
 
 def pytest_configure(config):

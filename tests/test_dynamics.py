@@ -86,18 +86,29 @@ def test_vmap_over_params_many_problems_one_compile():
 
 @pytest.mark.parametrize("n,chunk", [(20, 4), (20, 7), (9, 2), (48, 5)])
 def test_backends_bit_exact(n, chunk):
-    """serial (any chunk, divisible or not) and pallas match parallel."""
+    """serial (any chunk, divisible or not), pallas and hybrid (both impls,
+    the chunk doubling as a ragged MAC width P) match parallel."""
     w, b, sigma0 = _instance(n * 100 + chunk, n, bias=True)
     batch = jnp.stack([sigma0, -sigma0])
     results = {}
-    for backend in ("parallel", "serial", "pallas"):
-        cfg = api.ONNConfig(n=n, backend=backend, serial_chunk=chunk, max_cycles=20)
+    specs = {
+        "parallel": {},
+        "serial": {"serial_chunk": chunk},
+        "pallas": {},
+        "hybrid-scan": {
+            "parallel_factor": chunk, "hybrid_impl": "scan", "_backend": "hybrid"
+        },
+        "hybrid-pallas": {
+            "parallel_factor": chunk, "hybrid_impl": "pallas", "_backend": "hybrid"
+        },
+    }
+    for name, kw in specs.items():
+        backend = kw.pop("_backend", name)
+        cfg = api.ONNConfig(n=n, backend=backend, max_cycles=20, **kw)
         params = api.make_params(cfg, w, b)
-        results[backend] = np.asarray(
-            api.retrieve(cfg, params, batch).final_sigma
-        )
-    np.testing.assert_array_equal(results["parallel"], results["serial"])
-    np.testing.assert_array_equal(results["parallel"], results["pallas"])
+        results[name] = np.asarray(api.retrieve(cfg, params, batch).final_sigma)
+    for name in ("serial", "pallas", "hybrid-scan", "hybrid-pallas"):
+        np.testing.assert_array_equal(results["parallel"], results[name], err_msg=name)
 
 
 def test_legacy_route_flags_map_to_backend():

@@ -72,6 +72,63 @@ def test_fits_respects_route_ceiling():
     assert not hw.fits("hybrid", 507)
 
 
+# ---------------------------------------------------------------------------
+# P-aware hybrid model: parallel_factor threads the serialized-MAC width
+# through resources, frequency and time-to-solution
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_default_recovers_table5_endpoints():
+    """P-aware time_to_solution at the default width reproduces the paper's
+    Table 5 endpoints: 625 kHz recurrent @48, 6.1 kHz hybrid @506."""
+    assert hw.time_to_solution("recurrent", 48, 100, parallel=1) == pytest.approx(
+        100 / 625e3, rel=0.01
+    )
+    assert hw.time_to_solution("hybrid", 506, 100, parallel=1) == pytest.approx(
+        100 / 6.1e3, rel=0.02
+    )
+
+
+def test_parallel_one_is_the_published_design():
+    """parallel=1 must leave every pinned Table 4 number untouched."""
+    assert hw.hybrid_resources(506, parallel=1) == TABLE4_HYBRID_506
+    assert hw.oscillation_frequency("hybrid", 506, parallel=1) == pytest.approx(
+        hw.oscillation_frequency("hybrid", 506)
+    )
+
+
+def test_widening_the_mac_buys_frequency_for_resources():
+    """More MAC lanes → fewer passes → higher f_osc, at DSP/BRAM-port cost
+    growing ∝ N·P (the interpolation toward the recurrent regime)."""
+    f1 = hw.oscillation_frequency("hybrid", 506, parallel=1)
+    f8 = hw.oscillation_frequency("hybrid", 506, parallel=8)
+    f506 = hw.oscillation_frequency("hybrid", 506, parallel=506)
+    assert f1 < f8 < f506
+    # passes halve → frequency roughly scales with 1/passes
+    assert f8 / f1 == pytest.approx((506 + 2) / (64 + 2), rel=1e-6)
+    r1, r8 = hw.hybrid_resources(506, parallel=1), hw.hybrid_resources(506, parallel=8)
+    assert r8["dsp"] > r1["dsp"] and r8["bram"] > r1["bram"] and r8["lut"] > r1["lut"]
+
+
+def test_wider_mac_shrinks_capacity():
+    """The P-wide hybrid fits fewer oscillators — the fast-but-small vs
+    slow-but-large trade the engine planner quotes per request."""
+    caps = [hw.max_oscillators("hybrid", parallel=p) for p in (1, 8, 32)]
+    assert caps[0] == 506
+    assert caps[0] > caps[1] > caps[2]
+
+
+def test_parallel_validation():
+    with pytest.raises(ValueError):
+        hw.hybrid_resources(16, parallel=0)
+    with pytest.raises(ValueError):
+        hw.oscillation_frequency("hybrid", 16, parallel=-1)
+    # P is clamped to N: a wider-than-N datapath is the one-pass design
+    assert hw.oscillation_frequency("hybrid", 16, parallel=64) == pytest.approx(
+        hw.oscillation_frequency("hybrid", 16, parallel=16)
+    )
+
+
 def test_unknown_architecture_raises():
     with pytest.raises(ValueError):
         hw.resources("systolic", 16)

@@ -1,8 +1,6 @@
 """End-to-end launcher tests: train loop (checkpoint/restart), serving loop,
 ONN retrieval service."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.launch.retrieve import build_solver, serve_requests
@@ -24,8 +22,8 @@ def test_train_loop_loss_decreases(tmp_path):
 
 def test_train_resume_continues(tmp_path):
     d = str(tmp_path)
-    out1 = train("qwen2-1.5b", reduced=True, steps=10, batch=4, seq_len=64,
-                 ckpt_dir=d, ckpt_every=5, log_every=0)
+    train("qwen2-1.5b", reduced=True, steps=10, batch=4, seq_len=64,
+          ckpt_dir=d, ckpt_every=5, log_every=0)
     out2 = train("qwen2-1.5b", reduced=True, steps=20, batch=4, seq_len=64,
                  ckpt_dir=d, ckpt_every=5, log_every=0)
     # second run resumed (did not replay the first 10 steps)

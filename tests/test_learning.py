@@ -1,6 +1,5 @@
 """Learning rules: DO-I convergence, pattern stability, Hebbian properties."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
