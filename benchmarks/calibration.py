@@ -48,6 +48,22 @@ def calibrate(trials: int = 7) -> float:
     return best
 
 
+def time_best(fn, trials: int) -> float:
+    """Best-of-``trials`` wall seconds of ``fn()`` after one warmup call.
+
+    The shared metric timer of every benchmark (single methodology, so the
+    regression gate compares like with like): the warmup call pays compile
+    + first dispatch and is blocked on; each trial blocks on the result.
+    """
+    jax.block_until_ready(fn())  # warmup: compile + first dispatch
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 class window:
     """Calibration sampler for one benchmark run.
 

@@ -1,12 +1,13 @@
 """Bench-regression gate: fresh smoke runs vs committed repo-root baselines.
 
 The perf trajectory of this repo is tracked *in-repo*: the smoke outputs of
-``benchmarks/engine.py``, ``benchmarks/dynamics.py`` and
-``benchmarks/hybrid_scaling.py`` are committed at the repository root
-(``BENCH_engine.json`` / ``BENCH_dynamics.json`` / ``BENCH_hybrid.json``).
-This gate re-runs each smoke benchmark, extracts the wall-clock metrics,
-and fails (exit 1) when any metric regresses by more than ``--threshold``
-(default 25 %) against its baseline.
+``benchmarks/engine.py``, ``benchmarks/dynamics.py``,
+``benchmarks/hybrid_scaling.py`` and ``benchmarks/maxcut.py`` are committed
+at the repository root (``BENCH_engine.json`` / ``BENCH_dynamics.json`` /
+``BENCH_hybrid.json`` / ``BENCH_ising.json``).  This gate re-runs each
+smoke benchmark, extracts the wall-clock metrics, and fails (exit 1) when
+any metric regresses by more than ``--threshold`` (default 25 %) against
+its baseline.
 
 Cross-machine comparability: every benchmark JSON stamps ``calibration_s``
 — the wall time of one fixed reference contraction on the machine that
@@ -35,6 +36,7 @@ BENCH_METRICS: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
     "engine": (("policy",), ("wall_s",)),
     "dynamics": (("n",), ("early_exit_s", "fixed_scan_s", "vmap_run_s")),
     "hybrid": (("n", "parallel"), ("cycle_s", "retrieve_s")),
+    "ising": (("n", "backend", "replicas"), ("solve_s", "legacy_s")),
 }
 
 BASELINE_FILES = {name: f"BENCH_{name}.json" for name in BENCH_METRICS}
@@ -48,6 +50,8 @@ def _run_fresh(name: str, out_path: str) -> None:
         from benchmarks import dynamics as mod
     elif name == "hybrid":
         from benchmarks import hybrid_scaling as mod
+    elif name == "ising":
+        from benchmarks import maxcut as mod
     else:
         raise ValueError(f"unknown benchmark {name!r}")
     mod.main(smoke=True, out=out_path)

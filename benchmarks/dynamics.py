@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -56,14 +55,7 @@ def _instance(n: int, batch: int, seed: int, corruption: float = 0.15):
     return qw.values, sigma0
 
 
-def _time(fn, trials: int) -> float:
-    fn()  # warmup: compile + first dispatch
-    best = float("inf")
-    for _ in range(trials):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+_time = calibration.time_best
 
 
 def bench_size(n: int, batch: int, trials: int, seed: int = 0) -> Dict[str, Any]:

@@ -26,7 +26,6 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -65,14 +64,7 @@ def _one_cycle(cfg: dynamics.ONNConfig, params: dynamics.OnnParams, phase: jax.A
     return dynamics.functional_update(cfg, params, phase)
 
 
-def _time(fn, trials: int) -> float:
-    fn()  # warmup: compile + first dispatch
-    best = float("inf")
-    for _ in range(trials):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+_time = calibration.time_best
 
 
 def _assert_bit_exact(res, ref, n: int, p: int) -> None:

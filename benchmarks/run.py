@@ -53,7 +53,7 @@ def main(argv=None) -> int:
         ("tables4_5_capacity", capacity.main, {}),
         ("tables6_7_retrieval", retrieval.main, {"trials": trials}),
         ("kernels", kernels.main, {}),
-        ("maxcut_extra", maxcut.main, {}),
+        ("maxcut_ising", maxcut.main, {"smoke": args.quick}),
         ("roofline", roofline.main, {}),
         ("engine_bucket_policies", engine.main, {"smoke": args.quick}),
         ("dynamics_early_exit", dynamics.main, {"smoke": args.quick}),

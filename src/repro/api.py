@@ -60,7 +60,10 @@ from repro.core.dynamics import (  # noqa: F401 — re-exported API
     validate_weights,
     weighted_sum,
 )
-from repro.core.ising import MaxCutResult  # noqa: F401
+from repro.core.ising import (  # noqa: F401 — re-exported API
+    MaxCutResult,
+    solve_maxcut_batch,
+)
 from repro.core.learning import diederich_opper_i
 from repro.core.quantization import quantize_weights
 from repro.engine.registry import register_solver
@@ -105,9 +108,7 @@ class RetrievalSolver:
         cfg = ONNConfig(n=xi.shape[1], weight_bits=weight_bits, **cfg_kwargs)
         return cls(config=cfg, params=make_params(cfg, qw.values))
 
-    def solve(
-        self, instance: jax.Array, key: Optional[jax.Array] = None
-    ) -> ONNResult:
+    def solve(self, instance: jax.Array, key: Optional[jax.Array] = None) -> ONNResult:
         return retrieve(self.config, self.params, instance, key)
 
     def as_engine_solver(self):
@@ -119,22 +120,53 @@ class RetrievalSolver:
 
 @dataclasses.dataclass(frozen=True)
 class MaxCutSolver:
-    """Annealed asynchronous ONN sweeps on a max-cut embedding (paper §2.2).
+    """Batched oscillatory Ising machine on a max-cut embedding (paper §2.2).
 
-    ``solve`` takes an (N, N) adjacency matrix; the key drives the initial
-    spin draw and the per-sweep visit orders and is required.
+    ``solve`` takes an (N, N) adjacency matrix — or a (B, N, N) batch of
+    same-size instances — and a required key (initial spins + per-sweep
+    update groups).  Each instance runs ``replicas`` independent anneals of
+    ``sweeps`` grouped-staggered sweeps (``stagger_groups`` update groups
+    per sweep; 0 → auto, N → fully asynchronous), with every field
+    evaluation dispatched through the same ``backend`` table as retrieval —
+    ``"hybrid"`` with ``parallel_factor`` runs the serialized-MAC datapath,
+    ``hybrid_impl="pallas"`` the fused pass-group kernels.  ``stagnation``
+    > 0 freezes a replica after that many sweeps without a better cut
+    (early exit, checked every ``settle_chunk`` sweeps).
     """
 
     sweeps: int = 64
     weight_bits: int = 5
+    replicas: int = 1
+    stagger_groups: int = 0  # update groups K per sweep (0 = auto, n = async)
+    stagnation: int = 0  # sweeps without improvement before freeze (0 = off)
+    backend: str = "parallel"
+    parallel_factor: int = 0
+    hybrid_impl: str = "scan"
+    settle_chunk: int = 8
 
-    def solve(
-        self, instance: jax.Array, key: Optional[jax.Array] = None
-    ) -> MaxCutResult:
+    def config(self, n: int) -> ONNConfig:
+        """The backend-carrying ONN config of an N-vertex solve."""
+        return ONNConfig(
+            n=n,
+            weight_bits=self.weight_bits,
+            max_cycles=self.sweeps,
+            backend=self.backend,
+            parallel_factor=self.parallel_factor,
+            hybrid_impl=self.hybrid_impl,
+            settle_chunk=self.settle_chunk,
+        )
+
+    def solve(self, instance: jax.Array, key: Optional[jax.Array] = None) -> MaxCutResult:
         if key is None:
             raise ValueError("MaxCutSolver.solve requires a PRNG key")
-        return _ising.solve_maxcut(
-            instance, key, sweeps=self.sweeps, weight_bits=self.weight_bits
+        instance = jax.numpy.asarray(instance)
+        return _ising.solve_maxcut_batch(
+            self.config(instance.shape[-1]),
+            instance,
+            key,
+            replicas=self.replicas,
+            stagger_groups=self.stagger_groups,
+            stagnation=self.stagnation,
         )
 
     def as_engine_solver(self):
@@ -169,5 +201,6 @@ register_solver(
 register_solver(
     "maxcut",
     _maxcut_engine_factory,
-    "annealed async-sweep max-cut (sweeps=, weight_bits=)",
+    "batched multi-replica Ising-machine max-cut (sweeps=, replicas=, "
+    "stagger_groups=, backend=, parallel_factor=)",
 )

@@ -20,8 +20,11 @@ import jax.numpy as jnp
 
 
 def _check(w: jax.Array, sigma: jax.Array) -> None:
-    if w.ndim != 2 or w.shape[0] != w.shape[1]:
-        raise ValueError(f"coupling matrix must be square, got {w.shape}")
+    # w is (M, N): M output rows contracting over N spins.  M == N for a
+    # full coupling matrix; M < N serves row slabs (e.g. the Ising solver's
+    # staggered update groups evaluate the field only at group members).
+    if w.ndim != 2:
+        raise ValueError(f"coupling matrix must be 2-d, got {w.shape}")
     if sigma.shape[-1] != w.shape[1]:
         raise ValueError(f"spin vector {sigma.shape} incompatible with {w.shape}")
 

@@ -1032,10 +1032,19 @@ def async_sweep(w: jax.Array, sigma: jax.Array, order: jax.Array) -> jax.Array:
     Used by the Ising solver and by the energy-monotonicity property tests
     (asynchronous updates on symmetric zero-diagonal couplings never increase
     the Hamiltonian).  Ties keep the current spin.
+
+    Integer couplings accumulate in exact int32; float couplings (e.g.
+    unquantized Hebbian/DO-I output from :mod:`repro.core.learning`) keep a
+    float accumulator — casting them to int32 would silently truncate
+    fractional fields toward zero and flip the sign decision near zero.
     """
+    if jnp.issubdtype(w.dtype, jnp.integer):
+        acc_dtype = jnp.int32
+    else:
+        acc_dtype = jnp.promote_types(w.dtype, jnp.float32)
 
     def body(s, i):
-        field = w[i].astype(jnp.int32) @ s.astype(jnp.int32)
+        field = w[i].astype(acc_dtype) @ s.astype(acc_dtype)
         new_si = jnp.where(field > 0, 1, jnp.where(field < 0, -1, s[i])).astype(s.dtype)
         return s.at[i].set(new_si), None
 

@@ -11,7 +11,6 @@ concurrently.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
@@ -29,6 +28,32 @@ def _stack_keys(keys: List[jax.Array], pad_to: int) -> jax.Array:
     if pad_to > len(keys):
         keys = keys + list(jax.random.split(keys[-1], pad_to - len(keys)))
     return jnp.stack(keys)
+
+
+def _fpga_design_tradeoff(
+    n: int, cycles: float, bits: hw.BitConfig, parallel: int
+) -> Dict[str, Optional[float]]:
+    """Per-design hardware quotes for one instance (paper Table 5 trade).
+
+    Labels map to time-to-solution seconds, or None when the design does
+    not fit the FPGA budget at this N — the fast-but-small recurrent
+    against the slow-but-large hybrid, plus the configured P-wide hybrid
+    when the backend serializes with ``parallel`` > 1.
+    """
+    designs: Dict[str, Tuple[str, int]] = {
+        "recurrent": ("recurrent", 1),
+        "hybrid[P=1]": ("hybrid", 1),
+    }
+    if parallel > 1:
+        designs[f"hybrid[P={parallel}]"] = ("hybrid", parallel)
+    return {
+        label: (
+            hw.time_to_solution(arch, n, cycles, bits, parallel=par)
+            if hw.fits(arch, n, bits, parallel=par)
+            else None
+        )
+        for label, (arch, par) in designs.items()
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -222,9 +247,7 @@ class RetrievalEngineSolver:
             per_cycle = bucket_sig * (-(-bucket_sig // p)) * p
         else:
             per_cycle = bucket_sig * bucket_sig
-        cycles = self.expected_cycles() * (
-            cfg.clocks_per_cycle if cfg.mode == "rtl" else 1
-        )
+        cycles = self.expected_cycles() * (cfg.clocks_per_cycle if cfg.mode == "rtl" else 1)
         return float(batch_bucket) * per_cycle * cycles
 
     def _bits(self) -> hw.BitConfig:
@@ -242,67 +265,93 @@ class RetrievalEngineSolver:
         )
 
     def fpga_tradeoff(self, bucket_sig: int) -> Dict[str, Optional[float]]:
-        """Per-design hardware quotes for this instance (paper Table 5 trade).
-
-        Labels map to time-to-solution seconds, or None when the design does
-        not fit the FPGA budget at this N — so every request shows the
-        fast-but-small recurrent against the slow-but-large hybrid, plus the
-        configured P-wide hybrid when the backend serializes.
-        """
-        cfg, bits, n = self.config, self._bits(), self.config.n
-        designs: Dict[str, Tuple[str, int]] = {
-            "recurrent": ("recurrent", 1),
-            "hybrid[P=1]": ("hybrid", 1),
-        }
-        p = self._hybrid_parallel()
-        if p > 1:
-            designs[f"hybrid[P={p}]"] = ("hybrid", p)
-        return {
-            label: (
-                hw.time_to_solution(arch, n, cfg.max_cycles, bits, parallel=par)
-                if hw.fits(arch, n, bits, parallel=par)
-                else None
-            )
-            for label, (arch, par) in designs.items()
-        }
+        """Per-design hardware quotes for this instance (paper Table 5 trade);
+        see :func:`_fpga_design_tradeoff`."""
+        cfg = self.config
+        return _fpga_design_tradeoff(cfg.n, cfg.max_cycles, self._bits(), self._hybrid_parallel())
 
 
 # ---------------------------------------------------------------------------
-# Max-cut: oscillatory Ising machine (paper §2.2)
+# Max-cut: batched oscillatory Ising machine (paper §2.2)
 # ---------------------------------------------------------------------------
-
-
-@functools.lru_cache(maxsize=None)
-def _batched_maxcut(sweeps: int, weight_bits: int):
-    """One jitted vmapped max-cut executable per (sweeps, bits) — cached so
-    repeated slabs of the same shape reuse the compile."""
-
-    def solve(adjs: jax.Array, keys: jax.Array):
-        return jax.vmap(
-            lambda a, k: ising_lib.solve_maxcut(
-                a, k, sweeps=sweeps, weight_bits=weight_bits
-            )
-        )(adjs, keys)
-
-    return jax.jit(solve)
 
 
 class MaxCutEngineSolver:
     """Serves (N, N) adjacency matrices; one lane per request.
 
     Instances are padded to the N bucket with isolated (zero-degree)
-    vertices: they never flip real spins (zero field keeps the spin) and
-    contribute nothing to the cut value, though the per-sweep random visit
-    order is drawn over the padded size, so a padded solve is a *valid*
-    anneal of the same instance rather than a bit-replay of the unpadded
-    one.  Requests with different true N coalesce inside one bucket.
+    vertices, and the batched annealer's randomness is counter-based per
+    vertex index (``repro.core.ising``), so a padded solve is *bit-identical*
+    on the real vertices to the unpadded solve: the same (adjacency, key)
+    returns the same cut under every bucket policy and occupancy.  Requests
+    with different true N coalesce inside one bucket, each carrying its own
+    ``true_n`` mask.
+
+    Each request runs ``replicas`` independent anneals of ``sweeps``
+    grouped-staggered sweeps through the configured ``backend``
+    (parallel / serial / pallas / hybrid with ``parallel_factor``), with
+    optional per-replica early exit on cut-value ``stagnation``.  Compiles
+    are keyed through the core's one-executable-per-(config, shape) jit
+    story — per-bucket configs live in a dict bounded by the buckets
+    actually touched, and repeated installs of the same settings share one
+    executable (there is no unbounded per-install compile cache).
     """
 
-    def __init__(self, solver: Optional[Any] = None, sweeps: int = 64, weight_bits: int = 5):
+    def __init__(
+        self,
+        solver: Optional[Any] = None,
+        sweeps: int = 64,
+        weight_bits: int = 5,
+        replicas: int = 1,
+        stagger_groups: int = 0,
+        stagnation: int = 0,
+        backend: str = "parallel",
+        parallel_factor: int = 0,
+        hybrid_impl: str = "scan",
+        settle_chunk: int = 8,
+    ):
         if solver is not None:  # wrap an api.MaxCutSolver's settings
             sweeps, weight_bits = solver.sweeps, solver.weight_bits
+            replicas, stagger_groups = solver.replicas, solver.stagger_groups
+            stagnation, backend = solver.stagnation, solver.backend
+            parallel_factor = solver.parallel_factor
+            hybrid_impl, settle_chunk = solver.hybrid_impl, solver.settle_chunk
         self.sweeps = int(sweeps)
         self.weight_bits = int(weight_bits)
+        self.replicas = int(replicas)
+        self.stagger_groups = int(stagger_groups)
+        self.stagnation = int(stagnation)
+        self.parallel_factor = int(parallel_factor)
+        self.hybrid_impl = str(hybrid_impl)
+        self.settle_chunk = int(settle_chunk)
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        # Probe config: validates the backend/route combination once and
+        # normalizes legacy spellings (parallel_factor>0 selects hybrid).
+        probe = dynamics.ONNConfig(
+            n=max(1, self.parallel_factor),
+            weight_bits=self.weight_bits,
+            max_cycles=self.sweeps,
+            backend=str(backend),
+            parallel_factor=self.parallel_factor,
+            hybrid_impl=self.hybrid_impl,
+            settle_chunk=self.settle_chunk,
+        )
+        self.backend = probe.backend
+        self._cfgs: Dict[int, dynamics.ONNConfig] = {}  # bounded: one per N bucket
+
+    def _bucket_config(self, n_bucket: int) -> dynamics.ONNConfig:
+        if n_bucket not in self._cfgs:
+            self._cfgs[n_bucket] = dynamics.ONNConfig(
+                n=n_bucket,
+                weight_bits=self.weight_bits,
+                max_cycles=self.sweeps,
+                backend=self.backend,
+                parallel_factor=self.parallel_factor,
+                hybrid_impl=self.hybrid_impl,
+                settle_chunk=self.settle_chunk,
+            )
+        return self._cfgs[n_bucket]
 
     def lane_count(self, payload: Any) -> int:
         return 1
@@ -324,16 +373,24 @@ class MaxCutEngineSolver:
         batch_bucket: int,
     ) -> List[Any]:
         nb = bucket_sig
-        padded = []
+        cfg = self._bucket_config(nb)
+        padded, true_n = [], []
         for p in payloads:
             a = jnp.asarray(p)
             pad = nb - a.shape[0]
             padded.append(jnp.pad(a, ((0, pad), (0, pad))))
-        while len(padded) < batch_bucket:
+            true_n.append(a.shape[0])
+        while len(padded) < batch_bucket:  # dead rows: zero graph, no vertices
             padded.append(jnp.zeros((nb, nb), padded[0].dtype))
-        adjs = jnp.stack(padded)
-        res = _batched_maxcut(self.sweeps, self.weight_bits)(
-            adjs, _stack_keys(list(keys), batch_bucket)
+            true_n.append(0)
+        res = ising_lib.solve_maxcut_batch(
+            cfg,
+            jnp.stack(padded),
+            _stack_keys(list(keys), batch_bucket),
+            replicas=self.replicas,
+            stagger_groups=self.stagger_groups,
+            stagnation=self.stagnation,
+            true_n=jnp.asarray(true_n, jnp.int32),
         )
         out = []
         for i, p in enumerate(payloads):
@@ -343,16 +400,71 @@ class MaxCutEngineSolver:
                     sigma=res.sigma[i, :n],
                     cut_value=res.cut_value[i],
                     trace=res.trace[i],
+                    replica_cuts=res.replica_cuts[i],
+                    sweeps_run=res.sweeps_run[i],
                 )
             )
         return out
 
+    def stats(self) -> Dict[str, Any]:
+        """Static solve parameters (surfaced by ``Engine.stats()``)."""
+        return {
+            "sweeps": self.sweeps,
+            "replicas": self.replicas,
+            "stagger_groups": self.stagger_groups,
+            "stagnation": self.stagnation,
+            "backend": self.backend,
+            "n_buckets_compiled": sorted(self._cfgs),
+        }
+
+    def _hybrid_parallel(self, n: int) -> int:
+        cfg = self._bucket_config(n)
+        return cfg.hybrid_parallel if cfg.backend == "hybrid" else 1
+
+    def _cycles(self) -> float:
+        # One staggered sweep ≈ one oscillation cycle (every oscillator's
+        # enable fires once per period); replicas anneal back to back.
+        return float(self.sweeps * self.replicas)
+
+    def _bits(self) -> hw.BitConfig:
+        return hw.BitConfig(weight_bits=self.weight_bits)
+
     def cost_units(self, bucket_sig: int, batch_bucket: int) -> float:
-        return float(batch_bucket) * bucket_sig * bucket_sig * self.sweeps
+        """Executed work of one slab: each of a sweep's K update groups
+        evaluates the field only at its ceil(N/K)-row member window, so a
+        full sweep streams K·ceil(N/K) ≥ N coupling rows (the over-covered
+        window tail included) — on the hybrid backend each row costs the
+        full pass grid (ceil(N/P) passes of P MAC lanes, idle tail
+        included)."""
+        cfg = self._bucket_config(bucket_sig)
+        if cfg.backend == "hybrid":
+            p = min(cfg.hybrid_parallel, bucket_sig)
+            per_row = (-(-bucket_sig // p)) * p
+        else:
+            per_row = bucket_sig
+        k = ising_lib.resolve_stagger_groups(self.stagger_groups, bucket_sig)
+        rows_per_sweep = k * (-(-bucket_sig // k))
+        return float(batch_bucket) * self.replicas * self.sweeps * rows_per_sweep * per_row
 
     def fpga_seconds(self, bucket_sig: int) -> Optional[float]:
-        # One async sweep ≈ one oscillation cycle of the (large-N) hybrid.
-        return hw.time_to_solution("hybrid", bucket_sig, self.sweeps)
+        return hw.time_to_solution(
+            "hybrid",
+            bucket_sig,
+            self._cycles(),
+            self._bits(),
+            parallel=self._hybrid_parallel(bucket_sig),
+        )
+
+    def fpga_tradeoff(self, bucket_sig: int) -> Dict[str, Optional[float]]:
+        """Per-design hardware quotes for an Ising request — the planner
+        shows the recurrent-vs-hybrid trade for max-cut exactly as it does
+        for retrieval; see :func:`_fpga_design_tradeoff`."""
+        return _fpga_design_tradeoff(
+            bucket_sig,
+            self._cycles(),
+            self._bits(),
+            self._hybrid_parallel(bucket_sig),
+        )
 
 
 # ---------------------------------------------------------------------------

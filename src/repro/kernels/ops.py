@@ -39,23 +39,28 @@ def coupling_sum(
     block_i: int = _k.DEFAULT_BLOCK_I,
     block_k: int = _k.DEFAULT_BLOCK_K,
 ) -> jax.Array:
-    """S = W σ for spins σ of shape (N,) or (..., N); returns int32."""
+    """S = W σ for spins σ of shape (N,) or (..., N); returns int32.
+
+    ``w`` is (M, N): M == N for the full coupling matrix, M < N for a row
+    slab (the Ising solver evaluates the field only at staggered update-
+    group members); returns (..., M).
+    """
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
-    n = w.shape[0]
+    m, n = w.shape
     sig2d = sigma.reshape(-1, n).astype(jnp.int8)
     if not use_pallas:
         out = _ref.coupling_sum_ref(w, sig2d)
     else:
         bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(n, block_i)
+        bi = _pick_block(m, block_i)
         bk = _pick_block(n, block_k)
         sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
         w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
         out = _k.coupling_sum_pallas(
             sig_p, w_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
-        )[: sig2d.shape[0], :n]
-    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+        )[: sig2d.shape[0], :m]
+    return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
@@ -152,17 +157,18 @@ def hybrid_coupling_sum(
     ``parallel`` is the MAC width P: the contraction serializes into
     ``ceil(N / P)`` passes, grouped so every kernel launch covers one
     hardware-aligned pass-group (``repro.kernels.coupling_kernel``).
-    Bit-exact with :func:`coupling_sum` for every P.
+    Bit-exact with :func:`coupling_sum` for every P.  Like
+    :func:`coupling_sum`, ``w`` may be a (M, N) row slab.
     """
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
-    n = w.shape[0]
+    m, n = w.shape
     sig2d = sigma.reshape(-1, n).astype(jnp.int8)
     if not use_pallas:
         out = _ref.hybrid_coupling_sum_ref(w, sig2d, parallel)
     else:
         bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(n, block_i)
+        bi = _pick_block(m, block_i)
         bk = _pick_block(n, block_k)
         _, width = _k.hybrid_pass_groups(parallel, bk)
         sig_p = _k.pad_to_blocks(sig2d, (bb, width))
@@ -170,8 +176,8 @@ def hybrid_coupling_sum(
         out = _k.hybrid_coupling_sum_pallas(
             sig_p, w_p, parallel=parallel, block_b=bb, block_i=bi, block_k=bk,
             interpret=_interpret(),
-        )[: sig2d.shape[0], :n]
-    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+        )[: sig2d.shape[0], :m]
+    return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
 
 
 @functools.partial(

@@ -74,15 +74,33 @@ def test_element_scaling_orders():
     """Paper Table 1 + §3: adders N² (recurrent) vs N (hybrid)."""
     assert coupling.adders_required_parallel(48) == 48 * 47
     assert coupling.adders_required_serial(48) == 48
-    assert coupling.adders_required_parallel(506) / coupling.adders_required_serial(
-        506
-    ) == 505
+    assert coupling.adders_required_parallel(506) / coupling.adders_required_serial(506) == 505
     assert coupling.serialization_factor(506) >= 506
 
 
 def test_shape_validation():
-    w = jnp.zeros((4, 5), jnp.int8)
+    # spins must match the contraction (column) dimension of W
     with pytest.raises(ValueError):
-        coupling.weighted_sum_parallel(w, jnp.ones((5,), jnp.int8))
+        coupling.weighted_sum_parallel(jnp.zeros((4, 5), jnp.int8), jnp.ones((4,), jnp.int8))
     with pytest.raises(ValueError):
         coupling.weighted_sum_serial(jnp.zeros((4, 4), jnp.int8), jnp.ones((4,), jnp.int8), chunk=0)
+
+
+def test_rectangular_row_slab_matches_full_rows():
+    """(M, N) row slabs are supported (the Ising solver's staggered groups
+    evaluate fields only at group members) and equal the full contraction's
+    corresponding rows, serialized or not."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.integers(-15, 16, (9, 9)), jnp.int8)
+    sigma = jnp.asarray(rng.choice([-1, 1], (2, 9)), jnp.int8)
+    full = coupling.weighted_sum_parallel(w, sigma)
+    rows = jnp.asarray([1, 4, 6])
+    slab = w[rows]
+    assert np.array_equal(
+        np.asarray(coupling.weighted_sum_parallel(slab, sigma)),
+        np.asarray(full[:, rows]),
+    )
+    assert np.array_equal(
+        np.asarray(coupling.weighted_sum_serial(slab, sigma, chunk=4)),
+        np.asarray(full[:, rows]),
+    )

@@ -1,8 +1,10 @@
 """End-to-end launcher tests: train loop (checkpoint/restart), serving loop,
-ONN retrieval service."""
+ONN retrieval service, engine-served max-cut."""
 
 import pytest
 
+from repro.api import MaxCutSolver
+from repro.launch.maxcut import serve_cuts
 from repro.launch.retrieve import build_solver, serve_requests
 from repro.launch.serve import serve
 from repro.launch.train import train
@@ -61,6 +63,28 @@ def test_onn_retrieval_service():
     out = serve_requests(solver, xi, corruption=0.10, n_requests=64)
     assert out["accuracy"] >= 0.9, out  # paper: ~100 % at 10 % corruption
     assert out["mean_settle_cycles"] < 50
+
+
+def test_maxcut_service():
+    """Engine-served Ising machine: cuts beat the random baseline on every
+    instance and requests carry the recurrent-vs-hybrid hardware quote."""
+    solver = MaxCutSolver(sweeps=24, replicas=4, stagnation=6, backend="hybrid", parallel_factor=8)
+    out = serve_cuts(solver, n=24, n_requests=8, seed=3)
+    assert out["min_ratio_vs_half_edges"] > 1.0, out
+    assert out["mean_sweeps_run"] <= 24
+    assert out["estimate"]["fpga_tradeoff"] is not None
+    assert out["estimate"]["fpga_tradeoff"]["hybrid[P=8]"] is not None
+    assert out["engine"]["maxcut"]["backend"] == "hybrid"
+
+
+def test_maxcut_service_deterministic_across_bucket_policy():
+    """The serving-path determinism guarantee end to end: same instances +
+    same seed ⇒ same cuts under exact and pow2 bucketing."""
+    solver = MaxCutSolver(sweeps=12, replicas=2)
+    a = serve_cuts(solver, n=20, n_requests=4, seed=5, n_policy="exact")
+    b = serve_cuts(solver, n=20, n_requests=4, seed=5, n_policy="pow2")
+    assert a["mean_cut"] == b["mean_cut"]
+    assert a["mean_ratio_vs_half_edges"] == b["mean_ratio_vs_half_edges"]
 
 
 def test_onn_retrieval_via_pallas_kernel():
