@@ -1,0 +1,232 @@
+"""Sustained serving throughput: continuous batching vs drain batching.
+
+Replays one fixed mixed retrieval + max-cut request stream under open-loop
+Poisson arrivals (the schedule never slows down for the server) through two
+scheduling policies over the same engine machinery:
+
+* ``drain`` — the one-shot engine: arrivals queue, and the queue is flushed
+  when it reaches the slab lane budget or a flush timeout expires (classic
+  batch-and-drain serving).
+* ``continuous`` — ``repro.serving``: a ``ContinuousEngine`` ticked by the
+  serve daemon; early-exiting lanes free slots mid-slab and queued requests
+  join at the next settle-chunk boundary.
+
+Both modes serve bit-identical per-request results (keys are pinned in the
+stream); the trade is purely scheduling: drain amortizes dispatch into big
+slabs at the cost of queueing latency, continuous batching keeps lanes busy
+and bounds waiting at one settle chunk.  Wall time, sustained throughput
+and p50/p99 latency land in ``BENCH_serving.json`` for the regression gate.
+
+  PYTHONPATH=src python -m benchmarks.serving                      # full
+  PYTHONPATH=src python -m benchmarks.serving --smoke --out BENCH_serving.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import calibration
+from repro import serving
+from repro.engine import Engine, Request
+from repro.serving.daemon import percentile
+
+#: Shared shape knobs: both modes bucket batches the same way.
+BATCH_BUCKETS = (1, 2, 4, 8, 16)
+SLAB_LANES = 16
+#: Drain mode flushes at SLAB_LANES queued lanes or after this timeout.
+FLUSH_TIMEOUT_S = 0.025
+#: Daemon backoff between arrivals: don't busy-spin against the solves.
+IDLE_SLEEP_S = 0.0005
+
+
+def _shape_warmup(eng: Any, requests: List[Any]) -> None:
+    """Compile every (workload, N bucket, batch bucket) executable the
+    measured run can touch.  Arrival timing decides how many queued
+    requests coalesce into one slab, so the batch bucket that serves a
+    request is load-dependent; warming only one packing leaves XLA compiles
+    inside the measured window whenever the live packing differs."""
+    reps: Dict[Any, Any] = {}
+    for r in requests:
+        solver = eng.solver(r.workload)
+        sig = solver.bucket(solver.signature(r.payload), eng.n_policy)
+        if (r.workload, sig) not in reps:
+            payload = r.payload
+            if solver.lane_count(payload) > 1:
+                payload = jnp.asarray(payload)[0]  # 1-lane representative
+            reps[(r.workload, sig)] = payload
+    for (workload, _), payload in reps.items():
+        for bb in BATCH_BUCKETS:
+            futs = [eng.submit(Request(workload, payload)) for _ in range(bb)]
+            eng.flush()
+            for f in futs:
+                f.result()
+
+
+def _warmup(eng: Any, requests: List[Any], continuous: bool) -> None:
+    """Replay the stream once, unmeasured, so the measured run hits warm
+    compile caches only — the long-lived daemon's steady state.  Request
+    keys are pinned, so the warmup solves the measured run's exact work."""
+    _shape_warmup(eng, requests)
+    if continuous:
+        for r in requests:
+            eng.submit(r)
+        while not eng.idle:
+            eng.step()
+    else:
+        futs = [eng.submit(r) for r in requests]
+        eng.flush()
+        for f in futs:
+            f.result()
+
+
+def _build_engine(mode: str, seed: int, sweeps: int) -> Any:
+    if mode == "continuous":
+        eng = serving.ContinuousEngine(
+            jax.random.PRNGKey(seed), batch_buckets=BATCH_BUCKETS, slab_lanes=SLAB_LANES
+        )
+    else:
+        eng = Engine(jax.random.PRNGKey(seed), batch_buckets=BATCH_BUCKETS)
+    serving.install_mixed_workloads(eng, sweeps=sweeps)
+    return eng
+
+
+def run_drain(
+    requests: List[Any], offsets: List[float], seed: int, sweeps: int
+) -> Dict[str, Any]:
+    eng = _build_engine("drain", seed, sweeps)
+    _warmup(eng, requests, continuous=False)
+    latencies: List[float] = []
+    done = 0
+
+    def track(fut: Any, t_arrival: float) -> None:
+        fut.add_done_callback(
+            lambda f, t=t_arrival: latencies.append(time.perf_counter() - t)
+        )
+
+    t_start = time.perf_counter()
+    i = 0
+    oldest: Optional[float] = None
+    queued_lanes = 0
+    while done < len(requests):
+        now = time.perf_counter()
+        while i < len(requests) and offsets[i] <= now - t_start:
+            fut = eng.submit(requests[i])
+            track(fut, now)
+            queued_lanes += eng.solver(requests[i].workload).lane_count(
+                requests[i].payload
+            )
+            oldest = now if oldest is None else oldest
+            i += 1
+        flush_due = queued_lanes >= SLAB_LANES or (
+            oldest is not None and now - oldest >= FLUSH_TIMEOUT_S
+        )
+        if flush_due or (i == len(requests) and queued_lanes > 0):
+            served = eng.flush()
+            done += served
+            queued_lanes = 0
+            oldest = None
+    wall = time.perf_counter() - t_start
+    return _row("drain", eng, latencies, wall, len(requests))
+
+
+def run_continuous(
+    requests: List[Any], offsets: List[float], seed: int, sweeps: int
+) -> Dict[str, Any]:
+    eng = _build_engine("continuous", seed, sweeps)
+    _warmup(eng, requests, continuous=True)
+    daemon = serving.ServeDaemon(eng, signals=(), idle_sleep_s=IDLE_SLEEP_S)
+    t_start = time.perf_counter()
+    report = daemon.run(serving.timed_source(requests, offsets))
+    wall = time.perf_counter() - t_start
+    row = _row("continuous", eng, sorted(daemon._latencies), wall, len(requests))
+    row["mid_flight_joins"] = report["stats"]["serving"]["mid_flight_joins"]
+    row["ticks"] = report["ticks"]
+    return row
+
+
+def _row(
+    mode: str, eng: Any, latencies: List[float], wall: float, n: int
+) -> Dict[str, Any]:
+    stats = eng.stats()
+    lat = sorted(latencies)
+    if stats["completed"] < n or len(lat) < n:
+        raise RuntimeError(
+            f"{mode}: served {stats['completed']}/{n} "
+            f"({len(lat)} latencies) — stream did not drain"
+        )
+    return {
+        "mode": mode,
+        "requests": n,
+        "wall_s": round(wall, 4),
+        "throughput_rps": round(n / wall, 2),
+        "p50_s": round(percentile(lat, 50.0), 5),
+        "p99_s": round(percentile(lat, 99.0), 5),
+        "mean_s": round(sum(lat) / len(lat), 5),
+        "slabs": stats["slabs"],
+        "pad_fraction": round(stats["pad_fraction"], 4),
+    }
+
+
+def main(
+    smoke: bool = False,
+    out: Optional[str] = None,
+    requests: Optional[int] = None,
+    rate: Optional[float] = None,
+) -> List[Dict]:
+    n_requests = requests or (32 if smoke else 160)
+    rate_rps = rate or 40.0
+    sweeps = 8 if smoke else 16
+    repeats = 2 if smoke else 3
+    seed = 0
+    stream = serving.mixed_requests(n_requests, seed=seed)
+    offsets = serving.poisson_offsets(n_requests, rate_rps, seed=seed)
+    rows: List[Dict[str, Any]] = []
+    print("# serving: continuous batching vs drain batching (open-loop Poisson)")
+    print("mode,requests,wall_s,throughput_rps,p50_s,p99_s,mean_s,slabs")
+    with calibration.window() as cal:
+        for mode, runner in (("drain", run_drain), ("continuous", run_continuous)):
+            # Wall-clock latency on a shared machine is noisy: take the best
+            # of `repeats` full replays (each against the same fixed stream).
+            r: Optional[Dict[str, Any]] = None
+            before = cal.sample()
+            for _ in range(repeats):
+                trial = runner(stream, offsets, seed, sweeps)
+                if r is None or (trial["p99_s"], trial["wall_s"]) < (r["p99_s"], r["wall_s"]):
+                    r = trial
+            r["calibration_s"] = min(before, cal.sample())
+            rows.append(r)
+            print(
+                f"{r['mode']},{r['requests']},{r['wall_s']},{r['throughput_rps']},"
+                f"{r['p50_s']},{r['p99_s']},{r['mean_s']},{r['slabs']}"
+            )
+    if out:
+        payload = {
+            "bench": "serving",
+            "smoke": smoke,
+            "calibration_s": cal(),
+            "requests": n_requests,
+            "rate_rps": rate_rps,
+            "rows": rows,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small trial counts (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None, help="arrival rate (req/s)")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None, requests=args.requests,
+         rate=args.rate)

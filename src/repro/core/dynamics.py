@@ -681,8 +681,20 @@ def _run_rtl(
 # a frozen lane's flags cannot change in the fixed scan afterwards.
 
 
-class _BatchCarry(NamedTuple):
-    """Internal while-loop carry of the batched runner (all lanes-first)."""
+class BatchState(NamedTuple):
+    """Resumable state of the batched runner (all lanes-first).
+
+    Each lane carries its *own* cycle clock ``t`` and enable-signal offset
+    ``t0``, so lanes of different ages coexist in one slab: a lane installed
+    into a freed slot mid-solve (continuous batching — ``repro.serving``)
+    starts at ``t = 0`` and advances through exactly the trajectory it would
+    follow in a slab of its own.  ``run_batch``/``retrieve`` initialize every
+    lane at ``t = 0`` and this degenerates to a shared clock.
+
+    The pytree is public so a host-side scheduler can hold it between
+    :func:`advance_chunk` calls, scatter fresh lanes in with
+    :func:`install_lanes`, and read results with :func:`batch_result`.
+    """
 
     phase: jax.Array  # (B, N) uint8 phases, cycle t
     prev_phase: jax.Array  # (B, N) phases, cycle t-1
@@ -693,8 +705,13 @@ class _BatchCarry(NamedTuple):
     cycled: jax.Array  # (B,) bool: phase-level period-2 detected
     frozen: jax.Array  # (B,) bool: lane provably on its final trajectory
     frozen_p2: jax.Array  # (B,) bool: frozen inside a period-2 orbit
-    freeze_cycle: jax.Array  # (B,) int32 cycle count at freeze
-    t: jax.Array  # () int32 cycles elapsed (shared clock)
+    freeze_cycle: jax.Array  # (B,) int32 per-lane cycle count at freeze
+    t: jax.Array  # (B,) int32 per-lane cycles elapsed
+    t0: jax.Array  # (B,) int32 per-lane enable-signal offsets
+
+
+#: Backward-compatible internal alias (the carry predates the public name).
+_BatchCarry = BatchState
 
 
 def _shard_lanes(x: jax.Array) -> jax.Array:
@@ -724,7 +741,8 @@ def _rtl_cycle_batch(
     aux: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
     """One oscillation cycle (= ``clocks_per_cycle`` slow-clock edges) of the
-    rtl dynamics for all lanes at once; ``t0``: (B,) enable-signal offsets."""
+    rtl dynamics for all lanes at once; ``t0``/``t``: (B,) per-lane enable
+    offsets and cycle counts (lanes installed mid-slab run their own clock)."""
     clocks = cfg.clocks_per_cycle
     half = clocks // 2
 
@@ -743,13 +761,20 @@ def _rtl_cycle_batch(
     return phase, aux
 
 
-def _batch_step(cfg: ONNConfig, params: OnnParams, t0: jax.Array, c: _BatchCarry) -> _BatchCarry:
-    """One cycle of the batched dynamics + settle/freeze bookkeeping."""
+def _batch_step(cfg: ONNConfig, params: OnnParams, c: _BatchCarry) -> _BatchCarry:
+    """One cycle of the batched dynamics + settle/freeze bookkeeping.
+
+    Every quantity is per lane, including the clock: a lane's ``t`` advances
+    only while the lane is active, so lanes installed into the slab at
+    different real times each see the cycle sequence 0, 1, 2, … of an
+    isolated solve (the dynamics of one lane never read another lane's row
+    — integer weighted sums are row-independent — nor the shared tick
+    count, which is what makes mid-flight backfill bit-exact)."""
     if cfg.mode == "functional":
         new_phase = functional_update(cfg, params, c.phase)
         new_aux = c.aux
     else:
-        new_phase, new_aux = _rtl_cycle_batch(cfg, params, t0, c.t, c.phase, c.aux)
+        new_phase, new_aux = _rtl_cycle_batch(cfg, params, c.t0, c.t, c.phase, c.aux)
     new_phase = _shard_lanes(new_phase)
 
     t = c.t
@@ -782,7 +807,8 @@ def _batch_step(cfg: ONNConfig, params: OnnParams, t0: jax.Array, c: _BatchCarry
         frozen=c.frozen | newly_frozen,
         frozen_p2=c.frozen_p2 | (newly_frozen & carry_p2),
         freeze_cycle=jnp.where(newly_frozen, t + 1, c.freeze_cycle),
-        t=t + 1,
+        t=jnp.where(active, t + 1, t),
+        t0=c.t0,
     )
 
 
@@ -819,17 +845,11 @@ def _jitter_offsets(
     )(keys)
 
 
-def _run_batched(
-    cfg: ONNConfig,
-    params: OnnParams,
-    phase0: jax.Array,
-    keys: Optional[jax.Array],
-) -> ONNResult:
-    """The batched early-exit runner; ``phase0``: (B, N), ``keys``: (B,) or None."""
-    TRACE_COUNTER["run_batch"] += 1
+def _init_carry(
+    cfg: ONNConfig, phase0: jax.Array, keys: Optional[jax.Array]
+) -> _BatchCarry:
+    """Fresh per-lane carry at t = 0; ``phase0``: (B, N), ``keys``: (B,) or None."""
     b = phase0.shape[0]
-    params = _constrain_params(params)
-    phase0 = _shard_lanes(phase0)
     t0 = _jitter_offsets(cfg, keys, b)
     if cfg.mode == "rtl":
         clocks = cfg.clocks_per_cycle
@@ -838,8 +858,7 @@ def _run_batched(
         aux0 = osc.spin(theta_lab0.astype(jnp.uint8), cfg.phase_bits)
     else:
         aux0 = jnp.zeros((b, 1), jnp.int8)  # no amplitude history to track
-
-    carry0 = _BatchCarry(
+    return _BatchCarry(
         phase=phase0,
         prev_phase=phase0,
         aux=aux0,
@@ -850,18 +869,42 @@ def _run_batched(
         frozen=jnp.zeros((b,), bool),
         frozen_p2=jnp.zeros((b,), bool),
         freeze_cycle=jnp.full((b,), cfg.max_cycles, jnp.int32),
-        t=jnp.int32(0),
+        t=jnp.zeros((b,), jnp.int32),
+        t0=t0,
     )
+
+
+def resolve_chunk(cfg: ONNConfig) -> int:
+    """Cycles per early-exit check: ``settle_chunk`` clamped to [1, max_cycles]."""
     chunk = cfg.settle_chunk if cfg.settle_chunk > 0 else cfg.max_cycles
-    chunk = max(1, min(chunk, cfg.max_cycles))
+    return max(1, min(chunk, cfg.max_cycles))
+
+
+def _lane_done(cfg: ONNConfig, c: _BatchCarry) -> jax.Array:
+    """(B,) bool: lane frozen or out of cycle budget (its result is final)."""
+    return c.frozen | (c.t >= cfg.max_cycles)
+
+
+def _run_batched(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0: jax.Array,
+    keys: Optional[jax.Array],
+) -> ONNResult:
+    """The batched early-exit runner; ``phase0``: (B, N), ``keys``: (B,) or None."""
+    TRACE_COUNTER["run_batch"] += 1
+    params = _constrain_params(params)
+    phase0 = _shard_lanes(phase0)
+    carry0 = _init_carry(cfg, phase0, keys)
+    chunk = resolve_chunk(cfg)
 
     def body(c: _BatchCarry) -> _BatchCarry:
         return jax.lax.fori_loop(
-            0, chunk, lambda _, cc: _batch_step(cfg, params, t0, cc), c
+            0, chunk, lambda _, cc: _batch_step(cfg, params, cc), c
         )
 
     def cond(c: _BatchCarry) -> jax.Array:
-        return (c.t < cfg.max_cycles) & ~jnp.all(c.frozen)
+        return ~jnp.all(_lane_done(cfg, c))
 
     final = jax.lax.while_loop(cond, body, carry0)
     return _batch_result(cfg, final)
@@ -1019,6 +1062,125 @@ def _run_batch_traced(
     return _run_batched(
         cfg, params, phase0_batch, _lane_keys(cfg, keys, phase0_batch.shape[0])
     )
+
+
+# ---------------------------------------------------------------------------
+# Resumable chunked solve: the continuous-batching entry points
+# ---------------------------------------------------------------------------
+#
+# `run_batch`/`retrieve` drive the whole solve inside one `lax.while_loop`;
+# a continuous-batching scheduler (repro.serving) instead holds the
+# :class:`BatchState` on the host and advances it one settle-chunk at a time,
+# harvesting lanes as they freeze and scattering fresh requests into the
+# freed slots.  Bit-exactness with the one-shot path follows from two facts:
+# lane dynamics never read another lane's row (integer weighted sums are
+# row-independent), and every clock (`t`, `t0`) is per lane — so an installed
+# lane replays exactly the trajectory it would follow in a slab of its own.
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _init_batch_state_traced(
+    cfg: ONNConfig,
+    phase0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+    _ctx: Optional[Tuple] = None,  # static sharding-context discriminator
+) -> BatchState:
+    return _init_carry(
+        cfg, _shard_lanes(phase0_batch), _lane_keys(cfg, keys, phase0_batch.shape[0])
+    )
+
+
+def init_batch_state(
+    cfg: ONNConfig,
+    phase0_batch: jax.Array,
+    keys: Optional[jax.Array] = None,
+) -> BatchState:
+    """Fresh :class:`BatchState` for a (B, N) batch of phase states at t = 0.
+
+    ``keys`` follows the :func:`run_batch` contract: one key per lane, or a
+    single key split per lane; required only when the config draws
+    randomness (rtl ``sync_jitter``).
+    """
+    _require_keys_if_random(cfg, keys, "init_batch_state")
+    return _init_batch_state_traced(cfg, phase0_batch, keys, _sharding_cache_key())
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def dead_batch_state(cfg: ONNConfig, batch: int) -> BatchState:
+    """An all-frozen (batch, N) placeholder slab.
+
+    Every lane is born frozen with its budget spent, so it never holds the
+    early-exit loop open and :func:`advance_chunk` leaves it untouched; the
+    scheduler overwrites slots with real requests via :func:`install_lanes`.
+    """
+    aux_n = cfg.n if cfg.mode == "rtl" else 1
+    full = jnp.full((batch,), cfg.max_cycles, jnp.int32)
+    return BatchState(
+        phase=jnp.zeros((batch, cfg.n), jnp.uint8),
+        prev_phase=jnp.zeros((batch, cfg.n), jnp.uint8),
+        aux=jnp.zeros((batch, aux_n), jnp.int8),
+        prev_aux=jnp.zeros((batch, aux_n), jnp.int8),
+        settle_cycle=full,
+        settled=jnp.zeros((batch,), bool),
+        cycled=jnp.zeros((batch,), bool),
+        frozen=jnp.ones((batch,), bool),
+        frozen_p2=jnp.zeros((batch,), bool),
+        freeze_cycle=full,
+        t=full,
+        t0=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+@jax.jit
+def install_lanes(state: BatchState, sub: BatchState, slots: jax.Array) -> BatchState:
+    """Scatter the lanes of ``sub`` (width K) into ``state`` at rows ``slots``.
+
+    Pure scatter: untouched rows keep their arrays bit-identical, so lanes
+    mid-solve are unaffected by neighbours joining the slab.
+    """
+    return jax.tree.map(lambda a, b: a.at[slots].set(b), state, sub)
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _advance_chunk_traced(
+    cfg: ONNConfig,
+    params: OnnParams,
+    state: BatchState,
+    _ctx: Optional[Tuple] = None,  # static sharding-context discriminator
+) -> BatchState:
+    TRACE_COUNTER["advance_chunk"] += 1
+    params = _constrain_params(params)
+    chunk = resolve_chunk(cfg)
+    return jax.lax.fori_loop(
+        0, chunk, lambda _, c: _batch_step(cfg, params, c), state
+    )
+
+
+def advance_chunk(cfg: ONNConfig, params: OnnParams, state: BatchState) -> BatchState:
+    """Advance every live lane by one settle-chunk of cycles.
+
+    Runs ``resolve_chunk(cfg)`` iterations of the same per-lane step the
+    one-shot runner uses; frozen or budget-exhausted lanes are masked no-ops,
+    so over-stepping a done lane never perturbs its result.  One compile per
+    (config, slab shape) — the scheduler's tick is a single device dispatch.
+    """
+    return _advance_chunk_traced(cfg, params, state, _sharding_cache_key())
+
+
+@partial(jax.jit, static_argnums=0)
+def batch_done(cfg: ONNConfig, state: BatchState) -> jax.Array:
+    """(B,) bool: which lanes are final (frozen or out of cycle budget)."""
+    return _lane_done(cfg, state)
+
+
+@partial(jax.jit, static_argnums=0)
+def batch_result(cfg: ONNConfig, state: BatchState) -> ONNResult:
+    """Results for a slab; valid per lane once :func:`batch_done` is True.
+
+    Applies the same period-2 parity reconstruction as the one-shot runner,
+    so harvested lanes match ``run_batch``/``retrieve`` bit for bit.
+    """
+    return _batch_result(cfg, state)
 
 
 # ---------------------------------------------------------------------------

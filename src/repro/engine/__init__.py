@@ -22,7 +22,12 @@ from repro.engine.bucketing import (  # noqa: F401
     bucket_n,
     chop,
 )
-from repro.engine.engine import Engine, EngineSolver, Request  # noqa: F401
+from repro.engine.engine import (  # noqa: F401
+    Engine,
+    EngineSolver,
+    QueueFullError,
+    Request,
+)
 from repro.engine.planner import Estimate, Planner  # noqa: F401
 from repro.engine.registry import (  # noqa: F401
     available_solvers,

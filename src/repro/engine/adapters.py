@@ -11,10 +11,12 @@ concurrently.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+import dataclasses
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dynamics
 from repro.core import hardware_model as hw
@@ -59,6 +61,21 @@ def _fpga_design_tradeoff(
 # ---------------------------------------------------------------------------
 # Retrieval: batched associative memory (paper Fig. 7) on a fixed trained ONN
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RetrievalSlab:
+    """One in-flight continuous-batching slab (padded config + live state).
+
+    Held by the serving scheduler between ticks; ``state`` is replaced (not
+    mutated) by :meth:`RetrievalEngineSolver.admit` / ``advance``, so each
+    tick is a pure function of the previous state.
+    """
+
+    cfg: dynamics.ONNConfig
+    params: dynamics.OnnParams
+    state: dynamics.BatchState
+    width: int
 
 
 class RetrievalEngineSolver:
@@ -158,19 +175,111 @@ class RetrievalEngineSolver:
         out: List[Any] = []
         offset = 0
         for p, c in zip(payloads, counts):
-            sl = slice(offset, offset + c)
+            # Gather by an index *operand* rather than a static slice: the
+            # executable is keyed by the lane count only, not by where the
+            # request landed in the slab (a static [offset:offset+c] start
+            # compiles one slicer per offset — unbounded under live load).
+            idx = jnp.arange(offset, offset + c, dtype=jnp.int32)
             r = dynamics.ONNResult(
-                final_phase=res.final_phase[sl, :n],
-                final_sigma=res.final_sigma[sl, :n],
-                settle_cycle=res.settle_cycle[sl],
-                settled=res.settled[sl],
-                cycled=res.cycled[sl],
+                final_phase=res.final_phase[idx, :n],
+                final_sigma=res.final_sigma[idx, :n],
+                settle_cycle=res.settle_cycle[idx],
+                settled=res.settled[idx],
+                cycled=res.cycled[idx],
             )
             if jnp.asarray(p).ndim == 1:  # single-lane payload → unbatched result
                 r = jax.tree.map(lambda x: x[0], r)
             out.append(r)
             offset += c
         return out
+
+    # -- streaming slab protocol (continuous batching: repro.serving) -------
+    #
+    # A scheduler holds a RetrievalSlab per (N bucket, width), advances it
+    # one settle-chunk per tick, harvests lanes as they freeze, and installs
+    # queued requests into the freed slots.  Bit-exactness with
+    # ``solve_bucket`` holds lane for lane: ``admit`` splits each request
+    # key into per-lane keys exactly as the batch path does, and the core's
+    # per-lane clocks (``repro.core.dynamics.BatchState``) make an installed
+    # lane replay the isolated trajectory regardless of when it joins.
+
+    def begin_slab(self, bucket_sig: int, width: int) -> RetrievalSlab:
+        """A fresh all-dead slab of ``width`` lanes at the N bucket."""
+        cfg_b, params_b = self._padded_instance(bucket_sig)
+        return RetrievalSlab(
+            cfg=cfg_b,
+            params=params_b,
+            state=dynamics.dead_batch_state(cfg_b, width),
+            width=width,
+        )
+
+    def admit(
+        self,
+        slab: RetrievalSlab,
+        slots: Sequence[int],
+        payload: Any,
+        key: jax.Array,
+    ) -> None:
+        """Install one request's lanes into freed slab slots at t = 0."""
+        lanes2d = jnp.atleast_2d(jnp.asarray(payload, jnp.int8))
+        if len(slots) != lanes2d.shape[0]:
+            raise ValueError(f"{len(slots)} slots for {lanes2d.shape[0]} lanes")
+        sigma = dynamics.pad_sigma(lanes2d, slab.cfg.n)
+        lane_keys = None
+        if self._draws_randomness():
+            # Identical split to solve_bucket's per-request fan-out.
+            lane_keys = _stack_keys(
+                list(jax.random.split(key, lanes2d.shape[0])), lanes2d.shape[0]
+            )
+        sub = dynamics.init_batch_state(
+            slab.cfg, dynamics.initial_phase(slab.cfg, sigma), lane_keys
+        )
+        slab.state = dynamics.install_lanes(
+            slab.state, sub, jnp.asarray(slots, jnp.int32)
+        )
+
+    def advance(self, slab: RetrievalSlab) -> None:
+        """Advance every live lane by one settle-chunk (one device dispatch)."""
+        slab.state = dynamics.advance_chunk(slab.cfg, slab.params, slab.state)
+
+    def done_mask(self, slab: RetrievalSlab) -> Any:
+        """(width,) host bool array: lanes whose results are final."""
+        return jax.device_get(dynamics.batch_done(slab.cfg, slab.state))
+
+    def results(self, slab: RetrievalSlab) -> dynamics.ONNResult:
+        """Slab-wide results on the host (call once per harvest tick, then
+        ``extract``).
+
+        Fetched eagerly on purpose: the caller has already synced on
+        ``done_mask``, so the chunk is finished, and host-side numpy rows
+        let ``extract``/``observe`` slice without dispatching eager gathers
+        against the slab's sharded device arrays (those compile per
+        (shape, sharding) and would leak XLA compiles into steady-state
+        serving)."""
+        return jax.device_get(dynamics.batch_result(slab.cfg, slab.state))
+
+    def extract(
+        self, res: dynamics.ONNResult, slots: Sequence[int], payload: Any
+    ) -> dynamics.ONNResult:
+        """One request's result rows out of a slab-wide ``results``."""
+        idx = np.asarray(slots, np.int32)
+        n = self.config.n
+        r = dynamics.ONNResult(
+            final_phase=res.final_phase[idx, :n],
+            final_sigma=res.final_sigma[idx, :n],
+            settle_cycle=res.settle_cycle[idx],
+            settled=res.settled[idx],
+            cycled=res.cycled[idx],
+        )
+        if jnp.asarray(payload).ndim == 1:  # single-lane payload → unbatched
+            r = jax.tree.map(lambda x: x[0], r)
+        return r
+
+    def observe(self, res: dynamics.ONNResult, slots: Sequence[int]) -> None:
+        """Feed harvested lanes into the settle-cycle EMA (streaming path)."""
+        idx = np.asarray(slots, np.int32)
+        rows = jax.tree.map(lambda x: x[idx], res)
+        self._observe_settle(rows, len(slots))
 
     # -- measured settle-cycle cost model ----------------------------------
 

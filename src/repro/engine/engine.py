@@ -85,18 +85,30 @@ class EngineSolver(Protocol):
         ...
 
 
+class QueueFullError(RuntimeError):
+    """Admission control rejected a request: the queue is at capacity.
+
+    Raised by :meth:`Engine.submit` when accepting the request would push
+    the pending lane count past ``max_queue_lanes`` (backpressure — the
+    caller should retry later or shed load).  Nothing is enqueued.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One unit of submitted work.
 
     ``workload`` names an *installed* solver instance; ``payload`` is
     workload-specific; ``key`` optionally overrides the engine's per-request
-    key split (pass one for reproducible randomized solves).
+    key split (pass one for reproducible randomized solves); ``tenant``
+    identifies the submitter for fair scheduling and per-tenant accounting
+    (any string — unknown tenants get default weight 1).
     """
 
     workload: str
     payload: Any
     key: Optional[jax.Array] = None
+    tenant: str = "default"
 
 
 @dataclasses.dataclass
@@ -130,6 +142,10 @@ class Engine:
     auto_flush:
         Execute a bucket's queue from ``submit`` as soon as its pending
         lanes fill the largest batch bucket, bounding queue memory.
+    max_queue_lanes:
+        Admission-control bound: ``submit`` raises :class:`QueueFullError`
+        once accepting a request would push the total pending lane count
+        past this.  ``None`` (default) disables backpressure.
     """
 
     def __init__(
@@ -141,12 +157,14 @@ class Engine:
         coalesce: bool = True,
         auto_flush: bool = False,
         ema_alpha: float = 0.3,
+        max_queue_lanes: Optional[int] = None,
     ) -> None:
         self._key = key
         self.batch_buckets = tuple(sorted(batch_buckets))
         self.n_policy = n_policy
         self.coalesce = coalesce
         self.auto_flush = auto_flush
+        self.max_queue_lanes = max_queue_lanes
         self.planner = Planner(self.batch_buckets, ema_alpha=ema_alpha)
         self._solvers: Dict[str, EngineSolver] = {}
         self._queues: Dict[Tuple[str, Hashable], List[_Pending]] = {}
@@ -154,10 +172,12 @@ class Engine:
             "submitted": 0,
             "completed": 0,
             "failed": 0,
+            "rejected": 0,
             "slabs": 0,
             "lanes_served": 0,
             "lanes_padding": 0,
         }
+        self._tenants: Dict[str, Dict[str, int]] = {}
         self._bucket_log: Dict[Tuple[str, Hashable, int], int] = {}
 
     # -- installation ------------------------------------------------------
@@ -196,12 +216,19 @@ class Engine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def submit(self, request: Request) -> "Future[Any]":
-        """Enqueue one request; returns a Future resolved at drain/flush.
+    def _tenant_counters(self, tenant: str) -> Dict[str, int]:
+        return self._tenants.setdefault(
+            tenant, {"submitted": 0, "completed": 0, "failed": 0, "rejected": 0}
+        )
 
-        The request is assigned its own PRNG subkey (engine key split) and a
-        latency estimate (readable via :meth:`stats` while pending).
-        """
+    def _queued_lanes(self) -> int:
+        """Total pending lanes (admission control reads this)."""
+        return sum(p.lanes for ps in self._queues.values() for p in ps)
+
+    def _make_pending(
+        self, request: Request
+    ) -> Tuple[_Pending, Tuple[str, Hashable], int]:
+        """Validate + bucket + quote + key-split one request (not enqueued)."""
         solver = self.solver(request.workload)
         lanes = solver.lane_count(request.payload)
         if lanes > self.batch_buckets[-1]:
@@ -226,8 +253,33 @@ class Engine:
             key=request.key if request.key is not None else self._next_key(),
             estimate=est,
         )
+        return pending, qkey, lanes
+
+    def _admit(self, request: Request, lanes: int) -> None:
+        """Backpressure check; raises :class:`QueueFullError` on overflow."""
+        if (
+            self.max_queue_lanes is not None
+            and self._queued_lanes() + lanes > self.max_queue_lanes
+        ):
+            self._counts["rejected"] += 1
+            self._tenant_counters(request.tenant)["rejected"] += 1
+            raise QueueFullError(
+                f"queue full: {self._queued_lanes()} lanes pending + {lanes} "
+                f"requested > max_queue_lanes={self.max_queue_lanes}"
+            )
+
+    def submit(self, request: Request) -> "Future[Any]":
+        """Enqueue one request; returns a Future resolved at drain/flush.
+
+        The request is assigned its own PRNG subkey (engine key split) and a
+        latency estimate (readable via :meth:`stats` while pending).  Raises
+        :class:`QueueFullError` when admission control rejects it.
+        """
+        pending, qkey, lanes = self._make_pending(request)
+        self._admit(request, lanes)
         self._queues.setdefault(qkey, []).append(pending)
         self._counts["submitted"] += 1
+        self._tenant_counters(request.tenant)["submitted"] += 1
         if self.auto_flush:
             if sum(p.lanes for p in self._queues[qkey]) >= self.batch_buckets[-1]:
                 self._flush_queue(qkey)
@@ -265,19 +317,17 @@ class Engine:
                 bucket_sig, [p.request.payload for p in slab], [p.key for p in slab], bb
             )
         except Exception as exc:  # noqa: BLE001 — propagate through futures
-            for p in slab:
-                p.future.set_exception(exc)
-            self._counts["failed"] += len(slab)
+            self._fail_slab(slab, exc)
             return
         seconds = time.perf_counter() - t0
         if len(results) != len(slab):
-            exc = RuntimeError(
-                f"{workload}: solve_bucket returned {len(results)} results "
-                f"for {len(slab)} requests"
+            self._fail_slab(
+                slab,
+                RuntimeError(
+                    f"{workload}: solve_bucket returned {len(results)} results "
+                    f"for {len(slab)} requests"
+                ),
             )
-            for p in slab:
-                p.future.set_exception(exc)
-            self._counts["failed"] += len(slab)
             return
         self.planner.observe(
             (workload, bucket_sig, bb),
@@ -286,12 +336,19 @@ class Engine:
         )
         for p, r in zip(slab, results):
             p.future.set_result(r)
+            self._tenant_counters(p.request.tenant)["completed"] += 1
         self._counts["completed"] += len(slab)
         self._counts["slabs"] += 1
         self._counts["lanes_served"] += bb
         self._counts["lanes_padding"] += bb - lanes
         lkey = (workload, bucket_sig, bb)
         self._bucket_log[lkey] = self._bucket_log.get(lkey, 0) + 1
+
+    def _fail_slab(self, slab: List[_Pending], exc: BaseException) -> None:
+        for p in slab:
+            p.future.set_exception(exc)
+            self._tenant_counters(p.request.tenant)["failed"] += 1
+        self._counts["failed"] += len(slab)
 
     def _flush_queue(self, qkey: Tuple[str, Hashable]) -> int:
         pendings = self._queues.pop(qkey, [])
@@ -350,6 +407,19 @@ class Engine:
         return {
             **self._counts,
             "pad_fraction": 0.0 if served == 0 else self._counts["lanes_padding"] / served,
+            # One health structure for the daemon endpoint and the benchmark:
+            "queue_depth": {
+                "requests": sum(len(ps) for ps in self._queues.values()),
+                "lanes": self._queued_lanes(),
+            },
+            "admission": {
+                "max_queue_lanes": self.max_queue_lanes,
+                "rejected": self._counts["rejected"],
+            },
+            "lane_occupancy": 0.0 if served == 0 else (
+                (served - self._counts["lanes_padding"]) / served
+            ),
+            "tenants": {t: dict(c) for t, c in sorted(self._tenants.items())},
             "installed": sorted(self._solvers),
             # Workload-specific measurements, e.g. the retrieval adapter's
             # settle-cycle EMA (quotes tighten from max_cycles toward it).

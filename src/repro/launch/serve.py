@@ -1,11 +1,12 @@
-"""LM serving CLI: a thin adapter over the ``repro.engine`` serving engine.
+"""LM serving CLI: prompts through the continuous serving daemon.
 
-Each prompt is submitted as one engine request; the engine coalesces the
-lanes into a batch-bucket slab and the ``lm`` adapter runs prefill + the
-token-by-token decode loop (``repro.models.steps.make_generate``) with the
-KV/state cache donated between steps.  Swapping checkpoints of the same
-shape never recompiles (params are traced); a stream of same-shape requests
-compiles exactly one prefill and one decode executable per bucket.
+Each prompt is submitted as one engine request; the ``lm`` adapter runs
+prefill + the token-by-token decode loop (``repro.models.steps.
+make_generate``).  By default requests flow through the serving stack —
+:class:`repro.serving.ContinuousEngine` fair queues + scheduler ticks
+driven by a :class:`repro.serving.ServeDaemon` — so batching, bucketing and
+flush policy live in one place (the scheduler), not in this launcher.
+``--once`` keeps the legacy one-shot path: a plain engine ``drain()``.
 
 PRNG is explicit end to end: one seed key is split once per use (model
 init, prompts, vision, frames, engine root) and the engine splits one
@@ -33,6 +34,7 @@ import numpy as np
 
 from repro import configs
 from repro.engine import Engine, Request
+from repro.serving import ContinuousEngine, ServeDaemon
 
 
 def serve(
@@ -43,11 +45,12 @@ def serve(
     prompt_len: int = 32,
     max_new_tokens: int = 16,
     seed: int = 0,
+    once: bool = False,
 ) -> Dict[str, Any]:
     key = jax.random.PRNGKey(seed)
     k_model, k_prompts, k_vision, k_frames, k_engine = jax.random.split(key, 5)
 
-    eng = Engine(k_engine)
+    eng = Engine(k_engine) if once else ContinuousEngine(k_engine)
     lm = eng.install("lm", arch=arch, key=k_model, reduced=reduced)
     cfg = lm.cfg
 
@@ -74,7 +77,15 @@ def serve(
         futures.append(eng.submit(Request("lm", payload)))
 
     t0 = time.perf_counter()
-    stats = eng.drain()
+    if once:
+        stats = eng.drain()
+    else:
+        # Daemon path: scheduler ticks own all batching/flush decisions.
+        # The source is already closed, so the daemon ticks until idle —
+        # the launcher owns signals here (signals=()).
+        daemon = ServeDaemon(eng, signals=())
+        daemon.run(iter(()))
+        stats = eng.stats()
     wall = time.perf_counter() - t0
 
     tokens_out = np.stack([np.asarray(f.result()) for f in futures])
@@ -113,9 +124,12 @@ def main() -> None:
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--once", action="store_true",
+                    help="legacy one-shot drain instead of the serving daemon")
     args = ap.parse_args()
     print(json.dumps(serve(args.arch, batch=args.batch, prompt_len=args.prompt,
-                           max_new_tokens=args.tokens, seed=args.seed), indent=1))
+                           max_new_tokens=args.tokens, seed=args.seed,
+                           once=args.once), indent=1))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,35 @@
+"""repro.serving — continuous-batching streaming service on the engine.
+
+The deployment shape the paper's accelerator framing implies: a long-lived
+daemon serving a continuous mixed request stream.  Early-exit dynamics free
+solver lanes mid-slab; the scheduler backfills them with queued requests of
+the same bucket signature at the next settle-chunk boundary, bit-exact with
+solving each request in isolation (per-lane clocks in
+:class:`repro.core.dynamics.BatchState`).
+
+Quickstart::
+
+    from repro import serving
+    from repro.engine import Request
+
+    eng = serving.ContinuousEngine(jax.random.PRNGKey(0),
+                                   tenant_weights={"alpha": 2.0})
+    eng.install("letters", "retrieval", xi=patterns)
+    daemon = serving.ServeDaemon(eng, heartbeat_path="/tmp/hb")
+    report = daemon.run(source)           # yields Request batches per tick
+
+See :mod:`repro.serving.scheduler` for the tick semantics,
+:mod:`repro.serving.admission` for tenant fairness, and
+``launch/serve_daemon.py`` for the CLI.
+"""
+
+from repro.serving.admission import FairQueues  # noqa: F401
+from repro.serving.daemon import ServeDaemon  # noqa: F401
+from repro.serving.load import (  # noqa: F401
+    install_mixed_workloads,
+    mixed_requests,
+    poisson_offsets,
+    ticked_source,
+    timed_source,
+)
+from repro.serving.scheduler import ContinuousEngine, DrainRejectedError  # noqa: F401
