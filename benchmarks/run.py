@@ -50,7 +50,7 @@ def main(argv=None) -> int:
     sections = [
         ("table2_comparison", comparison.main, {}),
         ("figs9_11_scaling", scaling.main, {}),
-        ("tables4_5_capacity", capacity.main, {}),
+        ("storage_capacity_curve", capacity.main, {"smoke": args.quick}),
         ("tables6_7_retrieval", retrieval.main, {"trials": trials}),
         ("kernels", kernels.main, {}),
         ("maxcut_ising", maxcut.main, {"smoke": args.quick}),

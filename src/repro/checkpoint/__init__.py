@@ -16,6 +16,10 @@ Design (no orbax available — built in-repo):
 * **Async**: :class:`AsyncCheckpointer` snapshots to host memory synchronously
   (cheap) and writes to disk on a background thread, overlapping I/O with the
   next training steps — the standard large-scale trick.
+
+ONN checkpoints (a trained, quantized coupling matrix + its config header)
+live in :mod:`repro.checkpoint.onn` — ``save_onn`` / ``load_onn`` /
+:class:`OnnCheckpoint`, re-exported here.
 """
 
 from __future__ import annotations
@@ -30,6 +34,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.checkpoint.onn import OnnCheckpoint, load_onn, save_onn  # noqa: F401
 
 _SEP = "//"
 _STEP_RE = re.compile(r"^step_(\d+)$")

@@ -1,0 +1,105 @@
+"""ONN checkpoints: persist/restore a trained, quantized coupling matrix.
+
+One checkpoint = one directory holding ``onn.npz`` (int8 weight values,
+int32 bias, float32 quantization scale) and ``onn.json`` (every
+:class:`repro.core.dynamics.ONNConfig` field plus the quantization width and
+caller metadata).  The JSON header makes a checkpoint self-describing: the
+serve daemon can rebuild the exact solver — config and all — from the path
+alone, and the integer payload round-trips bit-exactly (no float weights are
+stored; the shadow weights are a training artifact, the machine runs the
+quantized ones).
+
+Written atomically (tmp directory + ``os.replace``), same discipline as the
+step checkpoints in :mod:`repro.checkpoint`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dynamics, quantization
+
+_ARRAYS = "onn.npz"
+_HEADER = "onn.json"
+_FORMAT = 1
+
+
+class OnnCheckpoint(NamedTuple):
+    """A restored ONN: ready-to-serve params plus their provenance."""
+
+    config: dynamics.ONNConfig
+    params: dynamics.OnnParams
+    quantized: quantization.QuantizedWeights
+    meta: Dict[str, Any]
+
+
+def save_onn(
+    path: str,
+    config: dynamics.ONNConfig,
+    quantized: quantization.QuantizedWeights,
+    bias: Optional[Any] = None,
+    *,
+    extra_meta: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Write one ONN checkpoint atomically to directory ``path``."""
+    values = np.asarray(quantized.values)
+    if values.shape != (config.n, config.n):
+        raise ValueError(f"weights {values.shape} != ({config.n}, {config.n})")
+    if quantized.bits != config.weight_bits:
+        raise ValueError(
+            f"{quantized.bits}-bit weights for a {config.weight_bits}-bit config"
+        )
+    bias_arr = (
+        np.zeros((config.n,), np.int32) if bias is None else np.asarray(bias, np.int32)
+    )
+    tmp = path.rstrip(os.sep) + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(
+        os.path.join(tmp, _ARRAYS),
+        values=values.astype(np.int8),
+        bias=bias_arr,
+        scale=np.float32(quantized.scale),
+    )
+    header = {
+        "format": _FORMAT,
+        "config": dataclasses.asdict(config),
+        "weight_bits": int(quantized.bits),
+        "meta": extra_meta or {},
+    }
+    with open(os.path.join(tmp, _HEADER), "w") as f:
+        json.dump(header, f, indent=1)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)  # atomic commit
+    return path
+
+
+def load_onn(path: str) -> OnnCheckpoint:
+    """Restore an ONN checkpoint; bit-exact inverse of :func:`save_onn`."""
+    with open(os.path.join(path, _HEADER)) as f:
+        header = json.load(f)
+    if header.get("format") != _FORMAT:
+        raise ValueError(f"unknown ONN checkpoint format: {header.get('format')!r}")
+    cfg_dict = dict(header["config"])
+    # Derived fields recompute in __post_init__ from the stored primaries.
+    cfg_fields = {f.name for f in dataclasses.fields(dynamics.ONNConfig) if f.init}
+    config = dynamics.ONNConfig(**{k: v for k, v in cfg_dict.items() if k in cfg_fields})
+    data = np.load(os.path.join(path, _ARRAYS))
+    quantized = quantization.QuantizedWeights(
+        values=jnp.asarray(data["values"], jnp.int8),
+        scale=jnp.float32(data["scale"]),
+        bits=int(header["weight_bits"]),
+    )
+    params = dynamics.make_params(config, quantized.values, data["bias"])
+    return OnnCheckpoint(
+        config=config, params=params, quantized=quantized, meta=header.get("meta", {})
+    )

@@ -50,38 +50,30 @@ def diederich_opper_i(
     unstable row of W for that pattern.  ``lr`` defaults to 1/N.
     Converges for P ≲ 2N random patterns; the paper's datasets (≤5 patterns)
     converge in a handful of sweeps.
+
+    Thin compatibility wrapper over the batched jittable trainer
+    (:func:`repro.train.doi.train_doi`), which fixes the legacy loop's
+    latent issues: the ``lr=None`` default now resolves per call instead of
+    being baked into the trace, sweeps run inside one compiled while-loop
+    (with early exit) instead of an eager Python dispatch per call, and
+    ``self_coupling=False`` masks the diagonal in the *stability check*
+    itself, not just in the weight updates.  For library batching,
+    pattern-count masking and quantization-aware margins, call
+    ``repro.train`` directly.
     """
-    xi = xi.astype(jnp.float32)
-    p, n = xi.shape
-    step = (1.0 / n) if lr is None else lr
-    w0 = hebbian(xi) if init_hebbian else jnp.zeros((n, n), jnp.float32)
-    if not self_coupling:
-        w0 = w0 * (1.0 - jnp.eye(n))
-    diag_mask = jnp.ones((n, n), jnp.float32)
-    if not self_coupling:
-        diag_mask = diag_mask - jnp.eye(n)
+    from repro.train.doi import TrainConfig, train_doi  # lazy: train builds on core
 
-    def pattern_update(w, pat):
-        # κ_i = ξ_i (W ξ)_i ; unstable rows get the Hebbian increment.
-        field = w @ pat
-        kappa = pat * field
-        unstable = (kappa < threshold).astype(jnp.float32)  # (N,)
-        dw = step * jnp.outer(unstable * pat, pat) * diag_mask
-        return w + dw, jnp.sum(unstable)
-
-    def sweep(carry, _):
-        w, n_unstable_prev, sweeps_done, converged = carry
-        w2, n_unstable = jax.lax.scan(pattern_update, w, xi)
-        total_unstable = jnp.sum(n_unstable)
-        newly_converged = total_unstable == 0
-        # Freeze once converged (scan runs to fixed length).
-        w_out = jnp.where(converged, w, w2)
-        sweeps_done = jnp.where(converged, sweeps_done, sweeps_done + 1)
-        return (w_out, total_unstable, sweeps_done, converged | newly_converged), None
-
-    init = (w0, jnp.float32(jnp.inf), jnp.int32(0), jnp.bool_(False))
-    (w, _, sweeps, converged), _ = jax.lax.scan(sweep, init, None, length=max_sweeps)
-    return DOResult(weights=w, sweeps=sweeps, converged=converged)
+    res = train_doi(
+        xi,
+        TrainConfig(
+            threshold=float(threshold),
+            max_sweeps=int(max_sweeps),
+            self_coupling=bool(self_coupling),
+            init_hebbian=bool(init_hebbian),
+        ),
+        lr=lr,
+    )
+    return DOResult(weights=res.weights, sweeps=res.sweeps, converged=res.converged)
 
 
 def stability_margins(w: jax.Array, xi: jax.Array) -> jax.Array:

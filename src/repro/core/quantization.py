@@ -52,6 +52,21 @@ def quantize_weights(w: jax.Array, bits: int = DEFAULT_WEIGHT_BITS) -> Quantized
     return QuantizedWeights(values=q, scale=scale.astype(jnp.float32), bits=bits)
 
 
+def fake_quantize(w: jax.Array, bits: int = DEFAULT_WEIGHT_BITS) -> jax.Array:
+    """Quantize-dequantize: the float weights the ``bits``-bit hardware runs.
+
+    Bit-exact with ``quantize_weights(w, bits).dequantize()`` (same scale
+    choice, same rounding), but jittable inside a training step: the
+    quantization-aware DO-I trainer (:mod:`repro.train.doi`) measures its
+    stability margins on this projection, so convergence means "stable on
+    the weights the FPGA stores", not on the float shadow weights.
+    """
+    qmax = symmetric_qmax(bits)
+    absmax = jnp.max(jnp.abs(w))
+    scale = jnp.where(absmax > 0, absmax / qmax, jnp.float32(1.0)).astype(jnp.float32)
+    return jnp.clip(jnp.round(w / scale), -qmax, qmax) * scale
+
+
 def quantize_phase(theta_continuous: jax.Array, phase_bits: int = 4) -> jax.Array:
     """Quantize a continuous phase in [0, 2π) to a ``phase_bits`` counter."""
     n = 1 << phase_bits

@@ -115,6 +115,7 @@ class RetrievalEngineSolver:
         self._settle_ema: Optional[float] = None
         self._settle_obs: int = 0
         self._settle_pending: List[jax.Array] = []  # per-slab mean, on device
+        self._swaps: int = 0
 
     @property
     def config(self):
@@ -143,6 +144,36 @@ class RetrievalEngineSolver:
 
     def _draws_randomness(self) -> bool:
         return self.config.mode == "rtl" and self.config.sync_jitter
+
+    def install_params(self, params: dynamics.OnnParams) -> None:
+        """Hot-install freshly trained weights; zero recompiles.
+
+        The solver config is untouched and the new pytree has the same
+        shapes/dtypes as the old one, so every cached ``retrieve`` /
+        ``advance_chunk`` executable keyed on (config, shape) is reused —
+        weights are a traced operand, not part of the compile key.  Padded
+        per-bucket instances are rebuilt eagerly for the buckets already
+        touched (``pad_params`` is a cheap device-side scatter at shapes the
+        jit cache has seen).  Live streaming slabs are *not* rewritten: a
+        :class:`RetrievalSlab` snapshots its params at ``begin_slab``, so
+        in-flight lanes finish on the weights they started with — the
+        scheduler retires those slabs at a settle-chunk boundary
+        (:meth:`repro.serving.scheduler.ContinuousEngine.hot_swap`).
+        """
+        cfg = self.config
+        weights = jnp.asarray(params.weights)
+        if weights.shape != (cfg.n, cfg.n):
+            raise ValueError(
+                f"hot swap shape mismatch: weights {weights.shape} != ({cfg.n}, {cfg.n})"
+            )
+        if weights.dtype != jnp.int8:
+            raise TypeError(f"hot swap needs int8 weights, got {weights.dtype}")
+        dynamics.validate_weights(weights, cfg.weight_bits)
+        self.solver = dataclasses.replace(self.solver, params=params)
+        for nb in list(self._padded):
+            cfg_b, _ = self._padded[nb]
+            self._padded[nb] = (cfg_b, dynamics.pad_params(cfg, params, nb))
+        self._swaps += 1
 
     def solve_bucket(
         self,
@@ -340,6 +371,7 @@ class RetrievalEngineSolver:
             "settle_ema_cycles": self._settle_ema,
             "settle_slabs_observed": self._settle_obs,
             "expected_cycles": round(self.expected_cycles(block=True), 3),
+            "hot_swaps": self._swaps,
         }
 
     def _hybrid_parallel(self) -> int:

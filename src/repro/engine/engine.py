@@ -210,6 +210,22 @@ class Engine:
             known = ", ".join(sorted(self._solvers)) or "<none>"
             raise KeyError(f"no installed solver {name!r} (installed: {known})") from None
 
+    def hot_swap(self, name: str, params: Any) -> None:
+        """Install freshly trained parameters into a live workload.
+
+        Delegates to the solver's ``install_params`` (shape/range checked
+        there); the solver keeps its config, so no executable recompiles —
+        subsequent slabs run the new weights through the cached jit traces.
+        On the one-shot engine the swap takes effect at the next flush;
+        requests already queued will be served with the *new* weights (drain
+        first for a clean cut — :class:`ContinuousEngine` overrides this to
+        retire live slabs at a settle-chunk boundary instead).
+        """
+        solver = self.solver(name)
+        if not hasattr(solver, "install_params"):
+            raise TypeError(f"workload {name!r} does not support hot weight install")
+        solver.install_params(params)
+
     # -- submission --------------------------------------------------------
 
     def _next_key(self) -> jax.Array:

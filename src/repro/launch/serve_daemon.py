@@ -50,6 +50,7 @@ def run_daemon(
     drain_queue_on_term: bool = False,
     ticked: int = 0,
     max_ticks: Optional[int] = None,
+    onn_ckpt: Optional[str] = None,
 ) -> Dict:
     eng = serving.ContinuousEngine(
         jax.random.PRNGKey(seed),
@@ -57,7 +58,7 @@ def run_daemon(
         tenant_weights=dict(tenants),
         max_queue_lanes=max_queue_lanes,
     )
-    serving.install_mixed_workloads(eng, sweeps=sweeps)
+    serving.install_mixed_workloads(eng, sweeps=sweeps, small_ckpt=onn_ckpt)
     requests = serving.mixed_requests(n_requests, seed=seed, tenants=tenants)
     if ticked > 0:  # deterministic per-tick arrivals (no wall clock)
         source = serving.ticked_source(requests, per_tick=ticked)
@@ -93,6 +94,9 @@ def main() -> None:
     ap.add_argument("--ticked", type=int, default=0,
                     help="deterministic source: N requests per tick (0 = Poisson)")
     ap.add_argument("--max-ticks", type=int, default=None)
+    ap.add_argument("--onn-ckpt", default=None,
+                    help="restore the small retrieval workload from this ONN "
+                         "checkpoint (written by repro.launch.train_onn)")
     args = ap.parse_args()
     report = run_daemon(
         rate_rps=args.rate,
@@ -106,6 +110,7 @@ def main() -> None:
         drain_queue_on_term=args.drain_queue,
         ticked=args.ticked,
         max_ticks=args.max_ticks,
+        onn_ckpt=args.onn_ckpt,
     )
     print(json.dumps(report, indent=1, default=str))
 

@@ -23,12 +23,42 @@ from repro.engine.engine import Request
 DEFAULT_TENANTS: Tuple[Tuple[str, float], ...] = (("alpha", 2.0), ("beta", 1.0))
 
 
-def install_mixed_workloads(engine: Any, *, sweeps: int = 8, replicas: int = 1) -> None:
+def install_mixed_workloads(
+    engine: Any,
+    *,
+    sweeps: int = 8,
+    replicas: int = 1,
+    small_ckpt: Optional[str] = None,
+) -> None:
     """Install the stream's three workloads (same shapes as the engine bench):
-    ``small`` retrieval (N=42), ``large`` retrieval (N=100), ``cuts`` max-cut."""
-    engine.install("small", "retrieval", xi=pat.load_dataset("7x6"))
+    ``small`` retrieval (N=42), ``large`` retrieval (N=100), ``cuts`` max-cut.
+
+    ``small_ckpt`` restores the ``small`` workload from an ONN checkpoint
+    (:func:`repro.checkpoint.load_onn`) instead of training in-process — the
+    daemon-restart path after ``repro.launch.train_onn`` persisted a trained
+    matrix.  The checkpoint must be N=42 (the stream's small probes).
+    """
+    if small_ckpt is None:
+        engine.install("small", "retrieval", xi=pat.load_dataset("7x6"))
+    else:
+        from repro.engine.adapters import RetrievalEngineSolver
+
+        engine.install(
+            "small", RetrievalEngineSolver(solver=restore_retrieval(small_ckpt, n=42))
+        )
     engine.install("large", "retrieval", xi=pat.load_dataset("10x10"))
     engine.install("cuts", "maxcut", sweeps=sweeps, replicas=replicas)
+
+
+def restore_retrieval(ckpt_path: str, n: Optional[int] = None) -> Any:
+    """An ``api.RetrievalSolver`` restored from an ONN checkpoint."""
+    from repro import api
+    from repro.checkpoint import load_onn
+
+    ck = load_onn(ckpt_path)
+    if n is not None and ck.config.n != n:
+        raise ValueError(f"checkpoint is N={ck.config.n}, the workload needs N={n}")
+    return api.RetrievalSolver(config=ck.config, params=ck.params)
 
 
 def mixed_requests(

@@ -38,8 +38,8 @@ class DrainRejectedError(RuntimeError):
     """
 
 
-@dataclasses.dataclass
-class _SlabEntry:
+@dataclasses.dataclass(eq=False)  # identity eq: entries.remove() must never
+class _SlabEntry:  # field-compare payload arrays (ambiguous elementwise bool)
     pending: _Pending
     slots: List[int]
 
@@ -90,6 +90,7 @@ class ContinuousEngine(Engine):
             "slabs_opened": 0,
             "slabs_retired": 0,
             "drain_rejected": 0,
+            "hot_swaps": 0,
         }
 
     # -- submission --------------------------------------------------------
@@ -236,6 +237,30 @@ class ContinuousEngine(Engine):
                 del self._slabs[qkey]
                 self._serving_counts["slabs_retired"] += 1
         return report
+
+    # -- hot weight install ------------------------------------------------
+
+    def hot_swap(self, name: str, params: Any) -> None:
+        """Install new weights into workload ``name`` at a chunk boundary.
+
+        Called between ticks (the scheduler is single-threaded, so any call
+        site is a settle-chunk boundary).  The solver's cached padded params
+        are replaced immediately — every slab opened from now on runs the
+        new weights — but live slabs are only *marked to drain*: a
+        ``RetrievalSlab`` snapshots its params at ``begin_slab``, so
+        in-flight lanes finish on the weights they started with, freed
+        slots stop backfilling, and once the slab empties it retires and a
+        fresh one opens on the new weights.  Post-swap submissions are
+        therefore bit-exact with a cold restart on the new weights, and
+        pre-swap submissions with the old — no lane ever sees a weight
+        change mid-trajectory.
+        """
+        super().hot_swap(name, params)
+        for (workload, _), rec in self._slabs.items():
+            if workload == name:
+                # Same drain-then-reopen path as a slab resize.
+                rec.pending_resize = True
+        self._serving_counts["hot_swaps"] += 1
 
     # -- lifecycle ---------------------------------------------------------
 

@@ -1,0 +1,32 @@
+"""repro.train: batched quantization-aware DO-I learning + hot weight install.
+
+The training subsystem for the associative-memory workload: a jittable,
+library-batched Diederich–Opper I trainer that measures stability on the
+quantized weights the hardware runs (:mod:`repro.train.doi`), and a
+:class:`HotSwap` seam that installs the result into a live engine at a
+settle-chunk boundary without recompiling (:mod:`repro.train.hotswap`).
+
+    from repro import train
+
+    result = train.train_doi(xi, train.TrainConfig(qat_bits=5))
+    params, qw = train.trained_params(cfg, result.weights)   # cold install
+    train.HotSwap(engine).install(result.weights)            # hot install
+"""
+
+from repro.train.doi import (
+    TRACE_COUNTER,
+    TrainConfig,
+    TrainResult,
+    train_doi,
+    trained_params,
+)
+from repro.train.hotswap import HotSwap
+
+__all__ = [
+    "TRACE_COUNTER",
+    "TrainConfig",
+    "TrainResult",
+    "train_doi",
+    "trained_params",
+    "HotSwap",
+]

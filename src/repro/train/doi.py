@@ -1,0 +1,204 @@
+"""Batched, jittable Diederich–Opper I training with quantization awareness.
+
+The paper trains its associative memories with the DO-I rule and runs them
+at 5-bit signed weights.  The legacy ``core/learning.py`` loop trained in
+float and quantized afterwards — margins that looked converged in float can
+collapse under the 5-bit projection.  This module is the batched rewrite:
+
+* **Jitted sweeps** — one ``lax.while_loop`` over sweeps with a ``lax.scan``
+  over patterns inside (sequential visits, the original convergence
+  prescription), unstable-*row* masking instead of Python loops.  One trace
+  per (``TrainConfig``, pattern-array shape); learning rate and pattern
+  count are traced operands, so changing them never recompiles.
+* **Library batching** — a leading ``(L, P, N)`` axis vmaps L independent
+  pattern libraries through the same executable (the capacity benchmark
+  trains every ladder point this way).
+* **Pattern-count masking** — ``n_patterns`` deactivates trailing rows of a
+  padded pattern array, so one executable serves every library size up to
+  P (and vmapped libraries may hold different live counts).
+* **Quantization-aware training (QAT)** — with ``qat_bits > 0`` the
+  stability field is computed through ``quantization.fake_quantize``
+  (quantize-dequantize, straight-through update on the float shadow
+  weights), so κ margins are measured on the weights the hardware will
+  actually run and convergence means "every pattern stable at 5 bits".
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dynamics, quantization
+
+#: Trace-time counter keyed by entry point — tests assert compile counts
+#: (same idiom as ``repro.core.dynamics.TRACE_COUNTER``).
+TRACE_COUNTER: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Static DO-I training configuration (the only jit-static argument).
+
+    ``qat_bits=0`` trains plain float DO-I; ``qat_bits=b`` measures every
+    stability check on the b-bit fake-quantized weights.  ``self_coupling``
+    defaults to off: the retrieval hardware stores no W_ii, and a diagonal
+    term inflates every κ_i by W_ii without storing anything, so margins
+    measured with self-coupling overstate what the machine retrieves.
+    """
+
+    threshold: float = 1.0
+    max_sweeps: int = 500
+    self_coupling: bool = False
+    init_hebbian: bool = True
+    qat_bits: int = 0
+
+    def __post_init__(self) -> None:
+        if self.threshold <= 0:
+            raise ValueError(f"threshold must be > 0, got {self.threshold}")
+        if self.max_sweeps < 1:
+            raise ValueError(f"max_sweeps must be >= 1, got {self.max_sweeps}")
+        if self.qat_bits != 0 and not (2 <= self.qat_bits <= 8):
+            raise ValueError(
+                f"qat_bits must be 0 (off) or in [2, 8], got {self.qat_bits}"
+            )
+
+
+class TrainResult(NamedTuple):
+    """Per-library training outputs (leading L axis iff the input had one)."""
+
+    weights: jax.Array  # (..., N, N) float32 shadow weights
+    sweeps: jax.Array  # (...,) int32: sweeps executed
+    converged: jax.Array  # (...,) bool: every live pattern stable
+    kappa_min: jax.Array  # (...,) float32: min margin on the *effective* weights
+
+
+def _effective(cfg: TrainConfig, w: jax.Array) -> jax.Array:
+    """The weights the stability check sees: fake-quantized under QAT, and
+    diagonal-masked when self-coupling is off (the check must not credit
+    W_ii even if an init or caller-provided matrix carries one)."""
+    if cfg.qat_bits:
+        w = quantization.fake_quantize(w, cfg.qat_bits)
+    if not cfg.self_coupling:
+        n = w.shape[-1]
+        w = w * (1.0 - jnp.eye(n, dtype=w.dtype))
+    return w
+
+
+def _train_library(
+    cfg: TrainConfig, xi: jax.Array, lr: jax.Array, n_patterns: jax.Array
+) -> TrainResult:
+    """Train one library: xi (P, N) float32, lr / n_patterns traced scalars."""
+    p, n = xi.shape
+    valid = (jnp.arange(p) < n_patterns).astype(jnp.float32)  # (P,)
+    diag_mask = jnp.ones((n, n), jnp.float32)
+    if not cfg.self_coupling:
+        diag_mask = diag_mask - jnp.eye(n)
+
+    if cfg.init_hebbian:
+        xv = xi * valid[:, None]
+        w0 = jnp.einsum("pi,pj->ij", xv, xi) / n
+        if not cfg.self_coupling:
+            w0 = w0 * diag_mask
+    else:
+        w0 = jnp.zeros((n, n), jnp.float32)
+
+    def pattern_update(
+        w: jax.Array, pat_v: Tuple[jax.Array, jax.Array]
+    ) -> Tuple[jax.Array, jax.Array]:
+        pat, v = pat_v
+        # κ_i = ξ_i (W_eff ξ)_i; unstable live rows get the Hebbian increment
+        # on the float shadow weights (straight-through under QAT).
+        kappa = pat * (_effective(cfg, w) @ pat)
+        unstable = (kappa < cfg.threshold).astype(jnp.float32) * v
+        dw = lr * jnp.outer(unstable * pat, pat) * diag_mask
+        return w + dw, jnp.sum(unstable)
+
+    def body(carry):
+        w, sweeps, unstable = carry
+        # Under vmap the while loop runs until every library's cond clears;
+        # finished libraries must pass through unchanged (no-op sweeps would
+        # still inflate their sweep counter).
+        done = (unstable == 0) | (sweeps >= cfg.max_sweeps)
+        w2, counts = jax.lax.scan(pattern_update, w, (xi, valid))
+        return (
+            jnp.where(done, w, w2),
+            jnp.where(done, sweeps, sweeps + 1),
+            jnp.where(done, unstable, jnp.sum(counts)),
+        )
+
+    def cond(carry):
+        _, sweeps, unstable = carry
+        return (unstable > 0) & (sweeps < cfg.max_sweeps)
+
+    # Sentinel 1.0: "not yet swept" (a sweep with zero updates leaves w
+    # unchanged, so exiting on unstable == 0 returns the converged weights).
+    w, sweeps, unstable = jax.lax.while_loop(
+        cond, body, (w0, jnp.int32(0), jnp.float32(1.0))
+    )
+    margins = xi * jnp.einsum("ij,pj->pi", _effective(cfg, w), xi)
+    kappa_min = jnp.min(jnp.where(valid[:, None] > 0, margins, jnp.inf))
+    return TrainResult(
+        weights=w,
+        sweeps=sweeps,
+        converged=unstable == 0,
+        kappa_min=kappa_min,
+    )
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _train_traced(
+    cfg: TrainConfig, xi: jax.Array, lr: jax.Array, n_patterns: jax.Array
+) -> TrainResult:
+    TRACE_COUNTER["train"] += 1
+    if xi.ndim == 3:
+        return jax.vmap(lambda x, c: _train_library(cfg, x, lr, c))(xi, n_patterns)
+    return _train_library(cfg, xi, lr, n_patterns)
+
+
+def train_doi(
+    xi: jax.Array,
+    config: TrainConfig = TrainConfig(),
+    *,
+    lr: Optional[float] = None,
+    n_patterns: Optional[jax.Array] = None,
+) -> TrainResult:
+    """Train DO-I couplings for one (P, N) library or a batch (L, P, N).
+
+    ``lr`` defaults to 1/N, resolved **per call** and passed as a traced
+    operand (the legacy loop baked the default into the trace, so a trace
+    cached from an N=100 call silently reused 1/100 elsewhere).
+    ``n_patterns`` (scalar, or (L,) when batched) masks trailing pattern
+    rows — padded rows never update weights and never count as unstable.
+    """
+    xi = jnp.asarray(xi)
+    if xi.ndim not in (2, 3):
+        raise ValueError(f"xi must be (P, N) or (L, P, N), got {xi.shape}")
+    p, n = xi.shape[-2], xi.shape[-1]
+    step = jnp.float32((1.0 / n) if lr is None else lr)
+    if n_patterns is None:
+        n_patterns = jnp.int32(p)
+    count = jnp.asarray(n_patterns, jnp.int32)
+    if xi.ndim == 3:
+        count = jnp.broadcast_to(count, xi.shape[:1])
+    elif count.ndim != 0:
+        raise ValueError("n_patterns must be a scalar for a single (P, N) library")
+    return _train_traced(config, xi.astype(jnp.float32), step, count)
+
+
+def trained_params(
+    cfg: dynamics.ONNConfig, weights: jax.Array
+) -> Tuple[dynamics.OnnParams, quantization.QuantizedWeights]:
+    """Project trained float weights into an ONN's serving format.
+
+    Quantizes to ``cfg.weight_bits`` and wraps as :class:`OnnParams` ready
+    for ``retrieve`` / ``install_params`` — the train → serve seam.
+    """
+    if weights.shape != (cfg.n, cfg.n):
+        raise ValueError(f"weights {weights.shape} != ({cfg.n}, {cfg.n})")
+    qw = quantization.quantize_weights(weights, cfg.weight_bits)
+    return dynamics.make_params(cfg, qw.values), qw

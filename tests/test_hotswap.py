@@ -1,0 +1,196 @@
+"""Hot weight install: swapping trained params into a live engine is
+bit-exact with a cold restart (in-flight lanes finish on the old weights,
+post-swap traffic runs the new ones) and compiles nothing new."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, train
+from repro import engine as engine_lib
+from repro.core import dynamics
+from repro.engine import adapters
+from repro.serving import ContinuousEngine
+
+RESULT_FIELDS = ("final_phase", "final_sigma", "settle_cycle", "settled", "cycled")
+
+
+def _patterns(seed: int, p: int, n: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice([-1, 1], (p, n)), jnp.int8)
+
+
+def _corrupt(xi: jax.Array, row: int, flips: int, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    v = np.asarray(xi[row]).copy()
+    idx = rng.choice(v.size, flips, replace=False)
+    v[idx] = -v[idx]
+    return jnp.asarray(v, jnp.int8)
+
+
+def _assert_same_result(got, want):
+    for field in RESULT_FIELDS:
+        assert np.array_equal(
+            np.asarray(getattr(got, field)), np.asarray(getattr(want, field))
+        ), field
+
+
+def _trained_solver(xi_new: jax.Array, cfg: dynamics.ONNConfig) -> api.RetrievalSolver:
+    """An api.RetrievalSolver carrying QAT-DO-I weights for ``xi_new``."""
+    res = train.train_doi(xi_new, train.TrainConfig(qat_bits=cfg.weight_bits))
+    params, _ = train.trained_params(cfg, res.weights)
+    return api.RetrievalSolver(config=cfg, params=params)
+
+
+@pytest.mark.parametrize("backend", ["parallel", "pallas", "hybrid"])
+def test_hot_swap_mid_stream_bit_exact_with_cold_restart(backend):
+    """Swap while a slab is in flight: pre-swap requests return exactly what
+    an engine that never swapped returns (old weights), post-swap requests
+    return exactly what a cold restart on the new weights returns — and the
+    swap itself triggers zero retraces."""
+    n = 24
+    xi_old, xi_new = _patterns(0, 3, n), _patterns(1, 3, n)
+    kw = dict(max_cycles=60, settle_chunk=1, backend=backend)
+    pre = [_corrupt(xi_old, i, 5, 10 + i) for i in range(2)]
+    post = [_corrupt(xi_new, i, 5, 20 + i) for i in range(2)]
+    keys = [jax.random.PRNGKey(100 + i) for i in range(4)]
+
+    live = ContinuousEngine(jax.random.PRNGKey(0), batch_buckets=(1, 2, 4), slab_lanes=4)
+    live.install("mem", "retrieval", xi=xi_old, **kw)
+    cfg = live.solver("mem").config
+    new_solver = _trained_solver(xi_new, cfg)
+
+    # Warm every executable the measured window can touch (pre and post
+    # shapes are identical, so one warm stream covers both).
+    warm = [live.submit(engine_lib.Request("mem", p)) for p in pre + post]
+    live.flush()
+    for f in warm:
+        f.result()
+
+    futs_pre = [
+        live.submit(engine_lib.Request("mem", p, key=k)) for p, k in zip(pre, keys[:2])
+    ]
+    live.step()  # slab live: pre lanes admitted and advanced one chunk
+    traces_before = dict(dynamics.TRACE_COUNTER)
+    live.hot_swap("mem", new_solver.params)
+    futs_post = [
+        live.submit(engine_lib.Request("mem", p, key=k)) for p, k in zip(post, keys[2:])
+    ]
+    live.flush()
+    assert dict(dynamics.TRACE_COUNTER) == traces_before, "hot swap recompiled"
+    stats = live.stats()
+    assert stats["serving"]["hot_swaps"] == 1
+    assert stats["solvers"]["mem"]["hot_swaps"] == 1
+
+    cold_old = ContinuousEngine(
+        jax.random.PRNGKey(7), batch_buckets=(1, 2, 4), slab_lanes=4
+    )
+    cold_old.install("mem", "retrieval", xi=xi_old, **kw)
+    ref_pre = [
+        cold_old.submit(engine_lib.Request("mem", p, key=k))
+        for p, k in zip(pre, keys[:2])
+    ]
+    cold_old.flush()
+
+    cold_new = ContinuousEngine(
+        jax.random.PRNGKey(8), batch_buckets=(1, 2, 4), slab_lanes=4
+    )
+    cold_new.install("mem", adapters.RetrievalEngineSolver(solver=new_solver))
+    ref_post = [
+        cold_new.submit(engine_lib.Request("mem", p, key=k))
+        for p, k in zip(post, keys[2:])
+    ]
+    cold_new.flush()
+
+    for fut, ref in zip(futs_pre, ref_pre):
+        _assert_same_result(fut.result(), ref.result())
+    for fut, ref in zip(futs_post, ref_post):
+        _assert_same_result(fut.result(), ref.result())
+
+
+def test_hot_swap_retires_live_slab_at_chunk_boundary():
+    """A swap marks the live slab to drain: freed slots stop backfilling and
+    a fresh slab (new weights) opens for the queued work."""
+    xi = _patterns(2, 3, 16)
+    eng = ContinuousEngine(jax.random.PRNGKey(0), batch_buckets=(1, 2), slab_lanes=2)
+    eng.install("mem", "retrieval", xi=xi, max_cycles=40, settle_chunk=1)
+    futs = [
+        eng.submit(engine_lib.Request("mem", _corrupt(xi, i % 3, 3, i)))
+        for i in range(4)
+    ]
+    eng.step()  # 2 lanes in flight, 2 queued
+    retired_before = eng.stats()["serving"]["slabs_retired"]
+    eng.hot_swap("mem", _trained_solver(xi, eng.solver("mem").config).params)
+    eng.flush()
+    assert all(f.result() is not None for f in futs)
+    stats = eng.stats()
+    assert stats["completed"] == 4
+    assert stats["serving"]["slabs_retired"] >= retired_before + 1
+    assert stats["serving"]["hot_swaps"] == 1
+
+
+def test_one_shot_engine_hot_swap_matches_fresh_build():
+    """On the drain engine a swap takes effect at the next flush and matches
+    an engine built cold on the new weights."""
+    n = 20
+    xi_old, xi_new = _patterns(3, 3, n), _patterns(4, 3, n)
+    probe = _corrupt(xi_new, 0, 4, 5)
+
+    eng = engine_lib.Engine(jax.random.PRNGKey(0))
+    eng.install("mem", "retrieval", xi=xi_old, max_cycles=50)
+    cfg = eng.solver("mem").config
+    new_solver = _trained_solver(xi_new, cfg)
+    eng.hot_swap("mem", new_solver.params)
+    fut = eng.submit(engine_lib.Request("mem", probe))
+    eng.flush()
+
+    fresh = engine_lib.Engine(jax.random.PRNGKey(1))
+    fresh.install("mem", adapters.RetrievalEngineSolver(solver=new_solver))
+    ref = fresh.submit(engine_lib.Request("mem", probe))
+    fresh.flush()
+    _assert_same_result(fut.result(), ref.result())
+
+
+def test_hot_swap_validation():
+    """Shape/dtype/range mismatches and non-swappable workloads fail loudly."""
+    xi = _patterns(5, 3, 16)
+    eng = engine_lib.Engine(jax.random.PRNGKey(0))
+    eng.install("mem", "retrieval", xi=xi, max_cycles=40)
+    eng.install("cuts", "maxcut", sweeps=4)
+    cfg = eng.solver("mem").config
+
+    wrong_n = dynamics.ONNConfig(n=8, weight_bits=cfg.weight_bits)
+    bad = dynamics.make_params(wrong_n, jnp.zeros((8, 8), jnp.int8))
+    with pytest.raises(ValueError, match="shape"):
+        eng.hot_swap("mem", bad)
+    with pytest.raises(TypeError, match="hot weight install"):
+        eng.hot_swap("cuts", dynamics.make_params(cfg, jnp.zeros((16, 16), jnp.int8)))
+    with pytest.raises(TypeError, match="hot weight install"):
+        train.HotSwap(eng, "cuts")
+
+    # Out-of-range couplings are rejected before they reach the dynamics.
+    over = jnp.full((16, 16), 30, jnp.int8)
+    with pytest.raises(ValueError, match="signed range"):
+        eng.solver("mem").install_params(
+            dynamics.OnnParams(weights=over, bias=jnp.zeros((16,), jnp.int32))
+        )
+
+
+def test_hotswap_class_quantizes_and_counts():
+    """HotSwap accepts float shadow weights, quantizes to the solver width,
+    and rejects mismatched quantized payloads."""
+    from repro.core.quantization import quantize_weights
+
+    xi = _patterns(6, 3, 16)
+    eng = engine_lib.Engine(jax.random.PRNGKey(0))
+    eng.install("retrieval", xi=xi, max_cycles=40)
+    hs = train.HotSwap(eng, "retrieval")
+    res = hs.train_and_install(xi)
+    assert bool(res.converged)
+    assert hs.swaps == 1
+    params, qw = hs.install(res.weights)
+    assert qw is not None and qw.bits == hs.config.weight_bits
+    assert hs.swaps == 2
+    with pytest.raises(ValueError, match="bit"):
+        hs.install(quantize_weights(res.weights, bits=4))

@@ -95,3 +95,21 @@ def test_onn_retrieval_via_pallas_kernel():
     out_j = serve_requests(solver_j, xi, corruption=0.10, n_requests=32)
     assert out_k["accuracy"] == out_j["accuracy"], (out_k, out_j)
     assert out_k["mean_settle_cycles"] == out_j["mean_settle_cycles"]
+
+
+def test_train_onn_hot_swap_flow(tmp_path):
+    """train_onn end to end: Hebbian baseline served, QAT-DO-I trained and
+    hot-installed mid-stream through a checkpoint round trip, accuracy
+    improves, and the swap compiles nothing."""
+    from repro.launch.train_onn import run_train_serve
+
+    out = run_train_serve(
+        dataset="7x6", corruption=0.15, probes=12, seed=0,
+        ckpt_dir=str(tmp_path), max_sweeps=200,
+    )
+    assert out["train"]["converged"]
+    assert out["accuracy_trained"] >= out["accuracy_hebbian"]
+    assert out["hot_swaps"] == 1
+    assert out["serving_retraces_after_swap"] == 0
+    assert out["checkpoint"] is not None
+    assert out["completed"] == 3 * out["probes"]  # warmup + two phases
