@@ -1,26 +1,40 @@
-"""Pallas kernel microbench: correctness sweep + schedule accounting.
+"""Pallas kernel microbench: correctness sweep + chunk-fusion wall clock.
 
-CPU container ⇒ kernels execute in interpret mode (Python), so wall-times are
-not TPU times.  What this bench reports instead:
+CPU container ⇒ kernels execute in interpret mode (Python), so Pallas launch
+times are not TPU times.  What this bench reports instead:
 
 * allclose vs the pure-jnp oracle across an (N, batch, block) sweep,
-* the VMEM working set per grid step for the chosen block shapes (must fit
-  the ~16 MiB/core budget — this is the tiling claim the kernel makes),
-* arithmetic intensity of the fused step (the roofline argument for why the
-  fused kernel beats the unfused pair on TPU),
-* wall-time of the jnp fallback path (the production CPU path) for scale.
+* the VMEM working set per grid step for the autotuned block shapes (must
+  fit the ~16 MiB/core budget — this is the tiling claim the kernel makes),
+* **gated**: wall clock of one settle-chunk through the fused whole-chunk
+  advance (``fused_s`` — bare phase scan + post-hoc bookkeeping, the
+  production path) vs the per-cycle ``_batch_step`` loop it replaced
+  (``percycle_s``), at the paper sizes 48 and 506,
+* **gated**: wall clock of the jnp fallback step (``fallback_s`` — the
+  production CPU path) at serving scale.
+
+  PYTHONPATH=src python -m benchmarks.kernels                      # full
+  PYTHONPATH=src python -m benchmarks.kernels --smoke --out BENCH_kernels.json
 """
 
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+import argparse
+import functools
+import json
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks import calibration
+from repro.core import dynamics
+from repro.kernels import autotune
 from repro.kernels import coupling_kernel as ck
 from repro.kernels import ops, ref
+
+_time = calibration.time_best
 
 
 def correctness_sweep() -> List[Dict]:
@@ -40,64 +54,163 @@ def correctness_sweep() -> List[Dict]:
 
 
 def vmem_accounting() -> List[Dict]:
+    """Working set of the *autotuned* tiles per bucket (not gated)."""
     rows = []
-    for bb, bi, bk in ((128, 128, 128), (128, 128, 512), (256, 256, 512)):
-        vb = ck.vmem_bytes(bb, bi, bk, fused=True)
+    for n, b in ((48, 16), (128, 128), (506, 32), (1024, 128)):
+        blk = autotune.blocks_for("step", n=n, batch=b)
+        vb = ck.vmem_bytes(blk.block_b, blk.block_i, blk.block_k, fused=True)
         # fused step: int8 dot (2·bb·bi·bk int-MACs) over (σ + W tiles) bytes
-        flops = 2 * bb * bi * bk
-        tile_bytes = bb * bk + bi * bk
+        flops = 2 * blk.block_b * blk.block_i * blk.block_k
+        tile_bytes = blk.block_b * blk.block_k + blk.block_i * blk.block_k
         rows.append(
             {
-                "block": f"{bb}x{bi}x{bk}",
+                "kernel": "vmem",
+                "n": n,
+                "batch": b,
+                "block": f"{blk.block_b}x{blk.block_i}x{blk.block_k}",
                 "vmem_bytes": vb,
                 "fits_16MiB": vb <= 16 * 2**20,
                 "arith_intensity": round(flops / tile_bytes, 1),
             }
         )
+        assert vb <= autotune.VMEM_BUDGET_BYTES, f"tuned blocks bust budget at n={n}"
     return rows
 
 
-def fallback_timing() -> List[Dict]:
+@functools.partial(jax.jit, static_argnums=0)
+def _percycle_chunk(
+    cfg: dynamics.ONNConfig, params: dynamics.OnnParams, state: dynamics.BatchState
+) -> dynamics.BatchState:
+    """The pre-fusion path: one ``_batch_step`` (≈20 masked bookkeeping ops
+    between coupling contractions) per cycle of the settle chunk."""
+    return jax.lax.fori_loop(
+        0,
+        dynamics.resolve_chunk(cfg),
+        lambda _, c: dynamics._batch_step(cfg, params, c),
+        state,
+    )
+
+
+def _instance(n: int, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-15, 16, (n, n))
+    w = jnp.asarray((w + w.T) // 2, jnp.int8)
+    sigma0 = jnp.asarray(rng.choice([-1, 1], (batch, n)), jnp.int8)
+    return w, sigma0
+
+
+def chunk_fusion_timing(batch: int, trials: int) -> List[Dict]:
+    """One settle-chunk: fused whole-chunk advance vs the per-cycle loop.
+
+    Both run the default parallel backend on uniform-random couplings (lanes
+    do not settle, so every call does the full chunk of work); both are
+    bit-exact with each other — asserted here before timing.
+    """
+    rows = []
+    for n in (48, 506):
+        w, sigma0 = _instance(n, batch, seed=n)
+        cfg = dynamics.ONNConfig(n=n, max_cycles=100, settle_chunk=32)
+        params = dynamics.make_params(cfg, w)
+        state = dynamics.init_batch_state(cfg, dynamics.initial_phase(cfg, sigma0))
+
+        fused = dynamics.advance_chunk(cfg, params, state)
+        percycle = _percycle_chunk(cfg, params, state)
+        for field in fused._fields:
+            exact = bool(jnp.all(getattr(fused, field) == getattr(percycle, field)))
+            assert exact, f"chunk fusion mismatch at n={n}: {field}"
+
+        fused_s = _time(lambda: dynamics.advance_chunk(cfg, params, state), trials)
+        percycle_s = _time(lambda: _percycle_chunk(cfg, params, state), trials)
+        rows.append(
+            {
+                "kernel": "chunk",
+                "n": n,
+                "batch": batch,
+                "chunk": dynamics.resolve_chunk(cfg),
+                "fused_s": round(fused_s, 5),
+                "percycle_s": round(percycle_s, 5),
+                "fusion_speedup": round(percycle_s / fused_s, 2),
+            }
+        )
+    return rows
+
+
+def fallback_timing(smoke: bool, trials: int) -> List[Dict]:
     rows = []
     key = jax.random.PRNGKey(0)
-    for n in (506, 4096):
+    sizes = (506, 1024) if smoke else (506, 4096)
+    for n in sizes:
         b = 256
         k1, k2 = jax.random.split(jax.random.fold_in(key, n))
         w = jax.random.randint(k1, (n, n), -15, 16, dtype=jnp.int8)
         sigma = jax.random.choice(k2, jnp.array([-1, 1], jnp.int8), shape=(b, n))
         fn = jax.jit(lambda w, s: ops.onn_step(w, s, use_pallas=False))
-        fn(w, sigma).block_until_ready()
-        t0 = time.time()
-        reps = 5
-        for _ in range(reps):
-            out = fn(w, sigma)
-        out.block_until_ready()
-        dt = (time.time() - t0) / reps
+        dt = _time(lambda: fn(w, sigma), trials)
         rows.append(
             {
+                "kernel": "onn_step_fallback",
                 "n": n,
                 "batch": b,
-                "ms_per_sweep": round(1000 * dt, 2),
+                "fallback_s": round(dt, 5),
                 "gmacs_per_s": round(2 * n * n * b / dt / 1e9, 1),
             }
         )
     return rows
 
 
-def main() -> List[Dict]:
-    rows = correctness_sweep()
-    ok = sum(1 for r in rows if r["exact"])
-    print(f"# kernel allclose sweep: {ok}/{len(rows)} exact")
-    vrows = vmem_accounting()
-    print("block,vmem_bytes,fits_16MiB,arith_intensity(int-ops/byte)")
-    for r in vrows:
-        print(f"{r['block']},{r['vmem_bytes']},{r['fits_16MiB']},{r['arith_intensity']}")
-    trows = fallback_timing()
-    print("n,batch,ms_per_sweep,gmacs_per_s (jnp fallback on CPU)")
-    for r in trows:
-        print(f"{r['n']},{r['batch']},{r['ms_per_sweep']},{r['gmacs_per_s']}")
-    return rows + vrows + trows
+def main(smoke: bool = False, out: Optional[str] = None) -> List[Dict]:
+    trials = 5 if smoke else 7
+    batch = 16 if smoke else 32
+    rows: List[Dict[str, Any]] = []
+    with calibration.window() as cal:
+        crows = correctness_sweep()
+        ok = sum(1 for r in crows if r["exact"])
+        print(f"# kernel allclose sweep: {ok}/{len(crows)} exact")
+
+        vrows = vmem_accounting()
+        print("n,batch,block,vmem_bytes,fits_16MiB,arith_intensity(int-ops/byte)")
+        for r in vrows:
+            print(
+                f"{r['n']},{r['batch']},{r['block']},{r['vmem_bytes']},"
+                f"{r['fits_16MiB']},{r['arith_intensity']}"
+            )
+
+        before = cal.sample()
+        krows = chunk_fusion_timing(batch, trials)
+        chunk_cal = min(before, cal.sample())
+        print("n,batch,chunk,fused_s,percycle_s,fusion_speedup")
+        for r in krows:
+            r["calibration_s"] = chunk_cal
+            print(
+                f"{r['n']},{r['batch']},{r['chunk']},{r['fused_s']},"
+                f"{r['percycle_s']},{r['fusion_speedup']}"
+            )
+
+        before = cal.sample()
+        frows = fallback_timing(smoke, trials)
+        fb_cal = min(before, cal.sample())
+        print("n,batch,fallback_s,gmacs_per_s (jnp fallback on CPU)")
+        for r in frows:
+            r["calibration_s"] = fb_cal
+            print(f"{r['n']},{r['batch']},{r['fallback_s']},{r['gmacs_per_s']}")
+        rows = crows + vrows + krows + frows
+    if out:
+        payload = {
+            "bench": "kernels",
+            "smoke": smoke,
+            "calibration_s": cal(),
+            "rows": rows,
+        }
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {out}")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small trial counts (CI)")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="JSON output path ('' disables)")
+    args = ap.parse_args()
+    main(smoke=args.smoke, out=args.out or None)

@@ -66,11 +66,52 @@ def markdown_table(rows: List[Dict]) -> str:
     return hdr + "\n".join(lines) + "\n"
 
 
+def phase_traffic(n: int, batch: int, chunk: int, phase_bits: int = 4) -> Dict:
+    """HBM phase/weight traffic for one settle chunk: per-cycle vs fused+packed.
+
+    The per-cycle launch path re-streams the (N, N) int8 weight matrix every
+    cycle and moves the phase state as int32 kernel operands (in + out).  The
+    whole-chunk kernel holds W resident in VMEM for all ``chunk`` cycles and
+    — with ``phase_pack`` — crosses the launch boundary with two 4-bit phases
+    per byte.  Analytic bytes, the roofline argument for the fused kernel on
+    memory-bound hardware; the CPU container cannot measure it.
+    """
+    sigma = batch * n  # int8 spins, derived in-register on the packed path
+    theta32 = batch * n * 4
+    unpacked = chunk * (n * n + sigma + 2 * theta32)
+    packed_theta = batch * ((n + 1) // 2)  # two 4-bit phases per byte
+    packed = n * n + 2 * packed_theta
+    return {
+        "n": n,
+        "batch": batch,
+        "chunk": chunk,
+        "unpacked_kb": round(unpacked / 1024, 1),
+        "packed_kb": round(packed / 1024, 1),
+        "traffic_ratio": round(unpacked / packed, 1),
+        # the θ-stream term alone: int32 operand vs two 4-bit phases per byte
+        "theta_pack_ratio": round(theta32 / packed_theta, 1),
+        "ideal_theta_ratio": round(8 / phase_bits, 1),
+    }
+
+
+def phase_traffic_table(chunk: int = 8) -> List[Dict]:
+    rows = [phase_traffic(n, b, chunk) for n, b in ((48, 16), (128, 128), (506, 32))]
+    print(f"# phase traffic per settle chunk ({chunk} cycles): per-cycle vs fused+packed")
+    print("n,batch,unpacked_kb,packed_kb,traffic_ratio,theta_pack_ratio")
+    for r in rows:
+        print(
+            f"{r['n']},{r['batch']},{r['unpacked_kb']},{r['packed_kb']},"
+            f"{r['traffic_ratio']},{r['theta_pack_ratio']}"
+        )
+    return rows
+
+
 def main() -> List[Dict]:
+    traffic = phase_traffic_table()
     rows = load()
     if not rows:
         print("# no dry-run artifacts found — run: python -m repro.launch.dryrun --all")
-        return []
+        return traffic
     print(f"# roofline table ({len(rows)} single-pod cells)")
     print("cell,compute_s,memory_s,collective_s,dominant,useful_ratio,hbm_gb,fits16")
     for r in rows:

@@ -52,7 +52,7 @@ def main(argv=None) -> int:
         ("figs9_11_scaling", scaling.main, {}),
         ("storage_capacity_curve", capacity.main, {"smoke": args.quick}),
         ("tables6_7_retrieval", retrieval.main, {"trials": trials}),
-        ("kernels", kernels.main, {}),
+        ("kernels", kernels.main, {"smoke": args.quick}),
         ("maxcut_ising", maxcut.main, {"smoke": args.quick}),
         ("roofline", roofline.main, {}),
         ("engine_bucket_policies", engine.main, {"smoke": args.quick}),

@@ -124,6 +124,15 @@ class ONNConfig:
     #: cycles skip the remaining ~95 W·σ products of ``max_cycles``.
     #: 0 disables early exit (one fixed-length chunk of ``max_cycles``).
     settle_chunk: int = 8
+    #: Move the 4-bit phase state across the kernel-operand boundary packed
+    #: two counters per byte (the paper's precision-matched storage).  The
+    #: solver state stays unpacked; on the ``pallas`` functional path the
+    #: kernels read/write the packed layout and derive σ from θ in-register,
+    #: halving the per-lane bytes per MAC tile.  Other backends are a
+    #: documented bit-exact no-op (packing is a transport layout, not a
+    #: semantic change), so the flag is legal on any backend.  Requires
+    #: ``phase_bits <= 4`` (two counters must fit one byte).
+    phase_pack: bool = False
 
     def __post_init__(self) -> None:
         if self.architecture not in ("recurrent", "hybrid"):
@@ -202,6 +211,11 @@ class ONNConfig:
                     f"hybrid_impl={self.hybrid_impl!r} only applies to "
                     f'backend="hybrid", not {self.backend!r}'
                 )
+        if self.phase_pack and self.phase_bits > 4:
+            raise ValueError(
+                f"phase_pack packs two phase counters per byte, which needs "
+                f"phase_bits <= 4; got phase_bits={self.phase_bits}"
+            )
 
     @property
     def clocks_per_cycle(self) -> int:
@@ -467,16 +481,23 @@ def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> ja
     On the pallas backend the whole cycle is one fused kernel launch —
     blocked int8 matmul + bias + phase-align epilogue over the real batch
     grid (``repro.kernels.ops.phase_step``) — instead of a coupling-sum
-    kernel followed by elementwise alignment.  Bit-exact either way.
+    kernel followed by elementwise alignment.  With ``cfg.phase_pack`` the
+    launch takes a single *packed* operand (two 4-bit counters per byte)
+    and derives σ from θ in-register.  Bit-exact every way.
     """
-    sigma = osc.spin(phase, cfg.phase_bits)
     if cfg.backend == "pallas":
         from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
 
         half = osc.n_positions(cfg.phase_bits) // 2
+        if cfg.phase_pack:
+            return kernel_ops.phase_step_packed(
+                params.weights, params.bias, phase, half=half
+            )
+        sigma = osc.spin(phase, cfg.phase_bits)
         return kernel_ops.phase_step(
             params.weights, sigma, params.bias, phase, half=half
         )
+    sigma = osc.spin(phase, cfg.phase_bits)
     if cfg.backend == "hybrid" and cfg.hybrid_impl == "pallas":
         from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
 
@@ -832,6 +853,147 @@ def _batch_result(cfg: ONNConfig, c: _BatchCarry) -> ONNResult:
     )
 
 
+# ---------------------------------------------------------------------------
+# Whole-chunk advance: the per-cycle settle/freeze bookkeeping of
+# ``_batch_step`` is exact but expensive to run every cycle — ~20 masked
+# elementwise updates between every W·σ product, and (on backend="pallas")
+# one kernel launch per cycle.  In functional mode the bookkeeping can be
+# reconstructed *after* the chunk instead, because two invariants hold:
+#
+# * the functional aux carry is constant, so a carry fixed point is exactly a
+#   phase fixed point and a carry period-2 orbit exactly a phase period-2
+#   orbit (``settled ⇒ frozen`` at every chunk boundary);
+# * every flag event (settle / cycle detection) therefore coincides with the
+#   lane's FIRST freeze event — there is nothing to record before it and the
+#   lane is inert after it.
+#
+# So the chunk runs as a bare ``scan`` of phase updates (or ONE multi-cycle
+# kernel launch), and the first fixed-point / period-2 event in the stacked
+# trajectory replays the ``_batch_step`` updates bit-exactly.  rtl mode keeps
+# the per-cycle loop: its aux (amplitude-history) carry is live, so freezing
+# needs the full per-cycle comparison.
+# ---------------------------------------------------------------------------
+
+#: Largest padded N whose resident (N, N) int8 weight tile fits the
+#: multi-cycle kernel's VMEM budget (N² bytes ≤ 4 MiB at N = 2048).
+MULTI_KERNEL_MAX_N = 2048
+
+
+def _multi_kernel_eligible(cfg: ONNConfig) -> bool:
+    """Whether the whole-chunk Pallas kernel can hold this instance's W."""
+    return (
+        cfg.mode == "functional"
+        and cfg.backend == "pallas"
+        and -(-cfg.n // 128) * 128 <= MULTI_KERNEL_MAX_N
+    )
+
+
+def _chunk_multi(
+    cfg: ONNConfig, params: OnnParams, c: _BatchCarry, chunk: int
+) -> _BatchCarry:
+    """One settle-chunk as ONE multi-cycle kernel launch (backend="pallas").
+
+    W stays resident in VMEM across all ``chunk`` cycles and the phase state
+    ping-pongs through the kernel's loop carry; with ``cfg.phase_pack`` the
+    state crosses the launch boundary in the packed 4-bit layout.
+    """
+    from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
+
+    half = osc.n_positions(cfg.phase_bits) // 2
+    (
+        phase, prev_phase, settle_cycle, settled, cycled, frozen, frozen_p2,
+        freeze_cycle, t,
+    ) = kernel_ops.phase_step_multi(
+        params.weights, params.bias, c.phase, c.prev_phase, c.t,
+        c.settle_cycle, c.settled, c.cycled, c.frozen, c.frozen_p2,
+        c.freeze_cycle,
+        half=half, chunk=chunk, max_cycles=cfg.max_cycles,
+        packed=cfg.phase_pack,
+    )
+    return c._replace(
+        phase=_shard_lanes(phase),
+        prev_phase=_shard_lanes(prev_phase),
+        settle_cycle=settle_cycle,
+        settled=settled,
+        cycled=cycled,
+        frozen=frozen,
+        frozen_p2=frozen_p2,
+        freeze_cycle=freeze_cycle,
+        t=t,
+    )
+
+
+def _chunk_fused(
+    cfg: ONNConfig, params: OnnParams, c: _BatchCarry, chunk: int
+) -> _BatchCarry:
+    """One settle-chunk as a bare phase scan + post-hoc exact bookkeeping.
+
+    The scan stacks the chunk's trajectory; the first fixed-point/period-2
+    event per lane (masked to its remaining cycle budget) reconstructs every
+    ``_batch_step`` flag update bit-exactly — see the section comment above
+    for why the first event is the only one.  Frozen lanes apply 0 cycles
+    (their stacked trajectory is computed speculatively and discarded), so
+    over-stepping a done lane never perturbs its result.
+    """
+
+    def body(ph, _):
+        nf = _shard_lanes(functional_update(cfg, params, ph))
+        return nf, nf
+
+    _, traj = jax.lax.scan(body, c.phase, None, length=chunk)
+    ext = jnp.concatenate([c.prev_phase[None], c.phase[None], traj], axis=0)
+    nxt, cur, prv = ext[2:], ext[1:-1], ext[:-2]
+    unchanged = jnp.all(nxt == cur, axis=-1)  # (chunk, B)
+    p2 = jnp.all(nxt == prv, axis=-1)
+    tk = c.t[None, :] + jnp.arange(chunk, dtype=jnp.int32)[:, None]
+    in_budget = tk < cfg.max_cycles
+    fixed_evt = unchanged & in_budget
+    p2_evt = p2 & ~unchanged & (tk > 0) & in_budget
+    evt = fixed_evt | p2_evt
+    any_evt = jnp.any(evt, axis=0)
+    kf = jnp.argmax(evt, axis=0).astype(jnp.int32)  # first event per lane
+    budget = jnp.clip(cfg.max_cycles - c.t, 0, chunk)
+    applied = jnp.where(any_evt, jnp.minimum(kf + 1, budget), budget)
+    applied = jnp.where(c.frozen, 0, applied)
+    live_evt = any_evt & ~c.frozen
+    is_fixed = live_evt & jnp.take_along_axis(fixed_evt, kf[None, :], 0)[0]
+    is_p2 = live_evt & jnp.take_along_axis(p2_evt, kf[None, :], 0)[0]
+    sel = applied[None, :, None].astype(jnp.int32)
+    new_prev = jnp.take_along_axis(ext, sel, axis=0)[0]
+    new_phase = jnp.take_along_axis(ext, sel + 1, axis=0)[0]
+    newly = is_fixed | is_p2
+    return c._replace(
+        phase=new_phase,
+        prev_phase=new_prev,
+        settle_cycle=jnp.where(is_fixed & ~c.settled, c.t + kf, c.settle_cycle),
+        settled=c.settled | is_fixed,
+        cycled=c.cycled | is_p2,
+        frozen=c.frozen | newly,
+        frozen_p2=c.frozen_p2 | is_p2,
+        freeze_cycle=jnp.where(newly, c.t + kf + 1, c.freeze_cycle),
+        t=c.t + applied,
+    )
+
+
+def _advance_chunk_batched(
+    cfg: ONNConfig, params: OnnParams, state: _BatchCarry, chunk: int
+) -> _BatchCarry:
+    """Advance the slab by one settle-chunk through the fastest exact route.
+
+    functional + pallas (W fits VMEM) → one multi-cycle kernel launch;
+    functional otherwise → fused scan + post-hoc bookkeeping; rtl → the
+    per-cycle ``_batch_step`` loop (its amplitude-history carry is live).
+    All routes are bit-exact with ``chunk`` iterations of ``_batch_step``.
+    """
+    if cfg.mode == "functional":
+        if _multi_kernel_eligible(cfg):
+            return _chunk_multi(cfg, params, state, chunk)
+        return _chunk_fused(cfg, params, state, chunk)
+    return jax.lax.fori_loop(
+        0, chunk, lambda _, cc: _batch_step(cfg, params, cc), state
+    )
+
+
 def _jitter_offsets(
     cfg: ONNConfig, keys: Optional[jax.Array], batch: int
 ) -> jax.Array:
@@ -899,9 +1061,7 @@ def _run_batched(
     chunk = resolve_chunk(cfg)
 
     def body(c: _BatchCarry) -> _BatchCarry:
-        return jax.lax.fori_loop(
-            0, chunk, lambda _, cc: _batch_step(cfg, params, cc), c
-        )
+        return _advance_chunk_batched(cfg, params, c, chunk)
 
     def cond(c: _BatchCarry) -> jax.Array:
         return ~jnp.all(_lane_done(cfg, c))
@@ -1150,10 +1310,7 @@ def _advance_chunk_traced(
 ) -> BatchState:
     TRACE_COUNTER["advance_chunk"] += 1
     params = _constrain_params(params)
-    chunk = resolve_chunk(cfg)
-    return jax.lax.fori_loop(
-        0, chunk, lambda _, c: _batch_step(cfg, params, c), state
-    )
+    return _advance_chunk_batched(cfg, params, state, resolve_chunk(cfg))
 
 
 def advance_chunk(cfg: ONNConfig, params: OnnParams, state: BatchState) -> BatchState:

@@ -23,6 +23,7 @@ from repro.core import hardware_model as hw
 from repro.core import ising as ising_lib
 from repro.engine import bucketing
 from repro.engine.registry import register_solver
+from repro.kernels import autotune
 
 
 def _stack_keys(keys: List[jax.Array], pad_to: int) -> jax.Array:
@@ -184,6 +185,7 @@ class RetrievalEngineSolver:
     ) -> List[Any]:
         from repro import api  # local: api imports this module
 
+        autotune.warm(n=bucket_sig, batch=batch_bucket)
         cfg_b, params_b = self._padded_instance(bucket_sig)
         lanes2d = [jnp.atleast_2d(jnp.asarray(p, jnp.int8)) for p in payloads]
         counts = [x.shape[0] for x in lanes2d]
@@ -236,6 +238,7 @@ class RetrievalEngineSolver:
 
     def begin_slab(self, bucket_sig: int, width: int) -> RetrievalSlab:
         """A fresh all-dead slab of ``width`` lanes at the N bucket."""
+        autotune.warm(n=bucket_sig, batch=width)
         cfg_b, params_b = self._padded_instance(bucket_sig)
         return RetrievalSlab(
             cfg=cfg_b,
@@ -372,6 +375,7 @@ class RetrievalEngineSolver:
             "settle_slabs_observed": self._settle_obs,
             "expected_cycles": round(self.expected_cycles(block=True), 3),
             "hot_swaps": self._swaps,
+            "autotune": autotune.cache_info(),
         }
 
     def _hybrid_parallel(self) -> int:
@@ -514,6 +518,10 @@ class MaxCutEngineSolver:
         batch_bucket: int,
     ) -> List[Any]:
         nb = bucket_sig
+        # Ising's staggered sweep contracts (group, N) row slabs through the
+        # same weighted_sum kernels; warm the tuner on the replica-expanded
+        # batch so the first solve at this bucket resolves blocks cache-hot.
+        autotune.warm(n=nb, batch=max(1, batch_bucket * self.replicas), kinds=("step", "hybrid"))
         cfg = self._bucket_config(nb)
         padded, true_n = [], []
         for p in payloads:

@@ -283,6 +283,331 @@ def phase_step_pallas(
 
 
 # ---------------------------------------------------------------------------
+# Packed-phase operands: two 4-bit phase counters per byte (the paper's
+# precision-matched storage).  The σ operand of the MAC tile and the keep-θ
+# operand of the epilogue are both *derived in-register* from one packed
+# uint8 array — σ is a function of θ (σ = +1 iff θ < half) — so the kernel
+# moves half the σ/phase bytes per tile and the θ bytes shrink 4× vs the
+# int32 operand of ``phase_step_pallas``.
+# ---------------------------------------------------------------------------
+
+
+def _unpack_nibbles(packed: jax.Array, width: int) -> jax.Array:
+    """(bb, width/2) packed uint8 → (bb, width) int32 counters (low first)."""
+    p = packed.astype(jnp.int32)
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], width)
+
+
+def _pack_nibbles(vals: jax.Array) -> jax.Array:
+    """(bb, width) int32 counters in [0, 16) → (bb, width/2) uint8."""
+    v = vals.reshape(vals.shape[0], vals.shape[1] // 2, 2)
+    return (v[..., 0] | (v[..., 1] << 4)).astype(jnp.uint8)
+
+
+def packed_phase_vmem_bytes(bb: int, bi: int, bk: int) -> int:
+    """VMEM working set of one ``phase_step_packed_pallas`` grid step."""
+    packed_sig = bb * (bk // 2)  # uint8, two θ per byte
+    w = bi * bk  # int8
+    acc = bb * bi * 4  # int32 accumulator
+    packed_keep = bb * (bi // 2)  # uint8 keep-θ view
+    out = bb * bi * 4  # int32 phases out
+    return packed_sig + w + acc + packed_keep + out
+
+
+def _phase_step_packed_kernel(
+    half: int, packed_sig_ref, w_ref, bias_ref, packed_keep_ref, out_ref, acc_ref
+):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # σ derived in-register from the packed θ tile: σ = +1 iff θ < half.
+    theta = _unpack_nibbles(packed_sig_ref[...], w_ref.shape[1])
+    sigma = jnp.where(theta < half, 1, -1).astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        sigma,
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        s = acc_ref[...] + bias_ref[...].astype(jnp.int32)  # (bb, bi)
+        keep = _unpack_nibbles(packed_keep_ref[...], acc_ref.shape[1])
+        out_ref[...] = jnp.where(
+            s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), keep)
+        )
+
+
+def phase_step_packed_pallas(
+    packed_phase: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    *,
+    half: int,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed-operand θ' = phase-align(W σ(θ) + h, θ), one launch per cycle.
+
+    ``packed_phase``: (B, N/2) uint8, two 4-bit phase counters per byte
+    (:func:`repro.core.quantization.pack_phases`); both the σ operand of the
+    MAC tile and the epilogue's keep-θ view unpack it in-register, so it is
+    the *only* per-lane array the kernel reads.  Returns (B, N) int32 phases
+    (``phase_step_pallas`` contract).  Padded θ entries must be 0 (σ = +1
+    against zero weight columns — inert, the ``pad_sigma`` convention).
+    """
+    b, n_half = packed_phase.shape
+    ni, nk = w.shape
+    _require(ni == nk, f"phase_step_packed_pallas: weights {w.shape} not square")
+    _require(
+        2 * n_half == nk,
+        f"phase_step_packed_pallas: packed N/2={n_half} != weights N={nk}/2",
+    )
+    _require(bias.shape == (ni,), f"phase_step_packed_pallas: bias {bias.shape} != ({ni},)")
+    _require(
+        block_i % 2 == 0 and block_k % 2 == 0,
+        f"phase_step_packed_pallas: blocks ({block_i}, {block_k}) must be even",
+    )
+    _require(
+        b % block_b == 0 and ni % block_i == 0 and nk % block_k == 0,
+        f"phase_step_packed_pallas: shapes (b={b}, n={ni}) not multiples of "
+        f"blocks ({block_b}, {block_i}, {block_k}); pad with pad_to_blocks",
+    )
+    grid = (ni // block_i, b // block_b, nk // block_k)
+    bias2d = bias.reshape(1, -1)
+    return pl.pallas_call(
+        functools.partial(_phase_step_packed_kernel, half),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k // 2), lambda i, bb, k: (bb, k)),
+            pl.BlockSpec((block_i, block_k), lambda i, bb, k: (i, k)),
+            pl.BlockSpec((1, block_i), lambda i, bb, k: (0, i)),
+            pl.BlockSpec((block_b, block_i // 2), lambda i, bb, k: (bb, i)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_i), lambda i, bb, k: (bb, i)),
+        out_shape=jax.ShapeDtypeStruct((b, ni), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_i), jnp.int32)],
+        interpret=interpret,
+    )(packed_phase, w, bias2d, packed_phase)
+
+
+# ---------------------------------------------------------------------------
+# phase_step_multi: `chunk` oscillation cycles in ONE kernel launch.  The
+# weight matrix is loaded into VMEM once and stays resident; the phase state
+# ping-pongs through the fori_loop carry; the per-lane settle/freeze flags
+# (the early-exit bookkeeping of repro.core.dynamics._batch_step) are
+# computed in the same launch.  This collapses the `settle_chunk` launches
+# between two early-exit checks into one — the launch-overhead fix for the
+# small-N regime where per-cycle dispatch dominates.
+# ---------------------------------------------------------------------------
+
+
+def multi_vmem_bytes(block_b: int, n: int, packed: bool = False) -> int:
+    """VMEM working set of one ``phase_step_multi_pallas`` grid step."""
+    w = n * n  # int8, resident for all `chunk` cycles
+    phase = block_b * (n // 2 if packed else n * 4) * 2  # θ and prev-θ
+    bias = n * 4
+    flags = block_b * 1 * 4 * 7  # seven (bb, 1) int32 bookkeeping columns
+    live = block_b * n * (4 + 1)  # int32 field + int8 σ of the live cycle
+    return w + phase + bias + flags + live
+
+
+def _phase_step_multi_kernel(
+    half: int,
+    chunk: int,
+    max_cycles: int,
+    packed: bool,
+    w_ref,
+    bias_ref,
+    phase_ref,
+    prev_ref,
+    t_ref,
+    settle_ref,
+    settled_ref,
+    cycled_ref,
+    frozen_ref,
+    frozen_p2_ref,
+    freeze_ref,
+    phase_out,
+    prev_out,
+    settle_out,
+    settled_out,
+    cycled_out,
+    frozen_out,
+    frozen_p2_out,
+    freeze_out,
+    t_out,
+):
+    n = w_ref.shape[0]
+    w = w_ref[...]
+    bias = bias_ref[...].astype(jnp.int32)  # (1, n)
+    if packed:
+        ph0 = _unpack_nibbles(phase_ref[...], n)
+        prev0 = _unpack_nibbles(prev_ref[...], n)
+    else:
+        ph0 = phase_ref[...]
+        prev0 = prev_ref[...]
+
+    def cycle(_, carry):
+        # Exactly repro.core.dynamics._batch_step in functional mode (aux is
+        # constant there, so carry-fixed == phase-fixed and the freeze logic
+        # collapses to the phase tests below).  Bools ride as int32 {0, 1}.
+        ph, prev, t, sc, sd, cy, fz, fp2, fc = carry
+        sigma = jnp.where(ph < half, 1, -1).astype(jnp.int8)
+        s = (
+            jax.lax.dot_general(
+                sigma,
+                w,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )
+            + bias
+        )
+        nph = jnp.where(s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), ph))
+        active = (fz == 0) & (t < max_cycles)  # (bb, 1)
+        not_first = t > 0
+        lane_unchanged = jnp.all(nph == ph, axis=-1, keepdims=True)
+        phase_p2 = jnp.all(nph == prev, axis=-1, keepdims=True)
+        is_cycle2 = phase_p2 & ~lane_unchanged & not_first
+        sc = jnp.where(active & lane_unchanged & (sd == 0), t, sc)
+        sd = jnp.where(active & lane_unchanged, 1, sd)
+        cy = jnp.where(active & is_cycle2 & (sd == 0), 1, cy)
+        newly = active & (lane_unchanged | is_cycle2)
+        new_ph = jnp.where(active, nph, ph)
+        new_prev = jnp.where(active, ph, prev)
+        fp2 = jnp.where(newly & is_cycle2, 1, fp2)
+        fc = jnp.where(newly, t + 1, fc)
+        fz = jnp.where(newly, 1, fz)
+        t = jnp.where(active, t + 1, t)
+        return new_ph, new_prev, t, sc, sd, cy, fz, fp2, fc
+
+    init = (
+        ph0,
+        prev0,
+        t_ref[...],
+        settle_ref[...],
+        settled_ref[...],
+        cycled_ref[...],
+        frozen_ref[...],
+        frozen_p2_ref[...],
+        freeze_ref[...],
+    )
+    ph, prev, t, sc, sd, cy, fz, fp2, fc = jax.lax.fori_loop(0, chunk, cycle, init)
+    if packed:
+        phase_out[...] = _pack_nibbles(ph)
+        prev_out[...] = _pack_nibbles(prev)
+    else:
+        phase_out[...] = ph
+        prev_out[...] = prev
+    settle_out[...] = sc
+    settled_out[...] = sd
+    cycled_out[...] = cy
+    frozen_out[...] = fz
+    frozen_p2_out[...] = fp2
+    freeze_out[...] = fc
+    t_out[...] = t
+
+
+def phase_step_multi_pallas(
+    w: jax.Array,
+    bias: jax.Array,
+    phase: jax.Array,
+    prev_phase: jax.Array,
+    t: jax.Array,
+    settle_cycle: jax.Array,
+    settled: jax.Array,
+    cycled: jax.Array,
+    frozen: jax.Array,
+    frozen_p2: jax.Array,
+    freeze_cycle: jax.Array,
+    *,
+    half: int,
+    chunk: int,
+    max_cycles: int,
+    packed: bool = False,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """Run ``chunk`` functional-mode cycles + settle/freeze bookkeeping in one
+    launch; grid is 1-D over the batch (the weight matrix stays resident).
+
+    ``phase``/``prev_phase``: (B, N) int32 counters — or (B, N/2) packed
+    uint8 when ``packed`` (two counters per byte, unpacked in-register every
+    cycle and re-packed in the epilogue).  The seven bookkeeping columns are
+    (B, 1) int32 (bools as {0, 1}).  Returns the 9-tuple
+    (phase, prev_phase, settle_cycle, settled, cycled, frozen, frozen_p2,
+    freeze_cycle, t) with the same shapes/dtypes as the inputs.
+    """
+    ni, nk = w.shape
+    _require(ni == nk, f"phase_step_multi_pallas: weights {w.shape} not square")
+    b = phase.shape[0]
+    ph_cols = nk // 2 if packed else nk
+    ph_dtype = jnp.uint8 if packed else jnp.int32
+    if packed:
+        _require(nk % 2 == 0, f"phase_step_multi_pallas: packed N={nk} must be even")
+    for name, arr in (("phase", phase), ("prev_phase", prev_phase)):
+        _require(
+            arr.shape == (b, ph_cols),
+            f"phase_step_multi_pallas: {name} {arr.shape} != ({b}, {ph_cols})",
+        )
+    _require(bias.shape == (ni,), f"phase_step_multi_pallas: bias {bias.shape} != ({ni},)")
+    flags = (t, settle_cycle, settled, cycled, frozen, frozen_p2, freeze_cycle)
+    for arr in flags:
+        _require(
+            arr.shape == (b, 1),
+            f"phase_step_multi_pallas: bookkeeping {arr.shape} != ({b}, 1)",
+        )
+    _require(
+        b % block_b == 0,
+        f"phase_step_multi_pallas: batch {b} not a multiple of block_b={block_b}",
+    )
+    _require(chunk >= 1, f"phase_step_multi_pallas: chunk must be >= 1, got {chunk}")
+    grid = (b // block_b,)
+    ph_spec = pl.BlockSpec((block_b, ph_cols), lambda bb: (bb, 0))
+    flag_spec = pl.BlockSpec((block_b, 1), lambda bb: (bb, 0))
+    flag_shape = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_phase_step_multi_kernel, half, chunk, max_cycles, packed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ni, nk), lambda bb: (0, 0)),
+            pl.BlockSpec((1, ni), lambda bb: (0, 0)),
+            ph_spec,
+            ph_spec,
+            *([flag_spec] * 7),
+        ],
+        out_specs=[ph_spec, ph_spec, *([flag_spec] * 7)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ph_cols), ph_dtype),
+            jax.ShapeDtypeStruct((b, ph_cols), ph_dtype),
+            *([flag_shape] * 7),
+        ],
+        interpret=interpret,
+    )(
+        w,
+        bias.reshape(1, -1),
+        phase,
+        prev_phase,
+        t,
+        settle_cycle,
+        settled,
+        cycled,
+        frozen,
+        frozen_p2,
+        freeze_cycle,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Hybrid serialized-MAC coupling: the paper's hybrid datapath as a sequence
 # of blocked kernel launches.  The coupling sum is serialized into
 # ceil(N / P) passes of P-wide MACs; passes are grouped so that each *pass-

@@ -1,20 +1,35 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels.
 
 Handles padding to hardware-aligned block multiples, batch reshaping, backend
 selection (interpret mode on CPU — this container — and compiled mode on
 TPU), and a pure-jnp fallback (``use_pallas=False``) used by the large CPU
 benchmark sweeps where interpret-mode execution would dominate runtime.
+
+Block resolution happens *here*, in plain Python, before the jitted inner
+implementation is entered: explicit ``block_*`` arguments are honored (and
+clamped to the operand extent as before), while the default ``None`` asks
+the per-bucket autotuner (:mod:`repro.kernels.autotune`) for the tuned tile
+of this ``(N, batch)`` bucket.  The resolved ints are *static* arguments of
+the inner jit — resolved once per bucket shape, not re-derived per call —
+so repeated calls (and repeated engine installs) on a warmed bucket are
+pure jit-cache hits.  ``TRACE_COUNTER`` increments at trace time of each
+inner implementation; tests assert it stays flat across installs.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import coupling_kernel as _k
 from repro.kernels import ref as _ref
+
+#: Traces per inner kernel wrapper, incremented at trace (not call) time.
+TRACE_COUNTER: collections.Counter = collections.Counter()
 
 
 def _interpret() -> bool:
@@ -29,22 +44,27 @@ def _pick_block(size: int, preferred: int, minimum: int = 8) -> int:
     return max(b, minimum)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
-def coupling_sum(
-    w: jax.Array,
-    sigma: jax.Array,
-    *,
-    use_pallas: bool = True,
-    block_b: int = _k.DEFAULT_BLOCK_B,
-    block_i: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = _k.DEFAULT_BLOCK_K,
-) -> jax.Array:
-    """S = W σ for spins σ of shape (N,) or (..., N); returns int32.
+def _batch_extent(x: jax.Array) -> int:
+    b = 1
+    for d in x.shape[:-1]:
+        b *= d
+    return max(b, 1)
 
-    ``w`` is (M, N): M == N for the full coupling matrix, M < N for a row
-    slab (the Ising solver evaluates the field only at staggered update-
-    group members); returns (..., M).
-    """
+
+def _resolve_blocks(kind, b, m, n, block_b, block_i, block_k, k_minimum=8):
+    """(bb, bi, bk): explicit values clamped as before, ``None`` autotuned."""
+    tuned = None
+    if block_b is None or block_i is None or block_k is None:
+        tuned = autotune.blocks_for(kind, n=n, batch=b, m=m)
+    bb = tuned.block_b if block_b is None else _pick_block(b, block_b)
+    bi = tuned.block_i if block_i is None else _pick_block(m, block_i)
+    bk = tuned.block_k if block_k is None else _pick_block(n, block_k, minimum=k_minimum)
+    return bb, bi, bk
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
+def _coupling_sum_jit(w, sigma, *, use_pallas, block_b, block_i, block_k):
+    TRACE_COUNTER["coupling_sum"] += 1
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     m, n = w.shape
@@ -52,29 +72,42 @@ def coupling_sum(
     if not use_pallas:
         out = _ref.coupling_sum_ref(w, sig2d)
     else:
-        bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(m, block_i)
-        bk = _pick_block(n, block_k)
-        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
-        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
+        sig_p = _k.pad_to_blocks(sig2d, (block_b, block_k))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (block_i, block_k))
         out = _k.coupling_sum_pallas(
-            sig_p, w_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
+            sig_p, w_p, block_b=block_b, block_i=block_i, block_k=block_k,
+            interpret=_interpret(),
         )[: sig2d.shape[0], :m]
     return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
-def onn_step(
+def coupling_sum(
     w: jax.Array,
     sigma: jax.Array,
-    bias: jax.Array | None = None,
     *,
     use_pallas: bool = True,
-    block_b: int = _k.DEFAULT_BLOCK_B,
-    block_i: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = _k.DEFAULT_BLOCK_K,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """Fused ONN phase-update step: σ' = sign-align(W σ + h)."""
+    """S = W σ for spins σ of shape (N,) or (..., N); returns int32.
+
+    ``w`` is (M, N): M == N for the full coupling matrix, M < N for a row
+    slab (the Ising solver evaluates the field only at staggered update-
+    group members); returns (..., M).
+    """
+    m, n = w.shape
+    bb, bi, bk = _resolve_blocks(
+        "step", _batch_extent(sigma), m, n, block_b, block_i, block_k
+    )
+    return _coupling_sum_jit(
+        w, sigma, use_pallas=use_pallas, block_b=bb, block_i=bi, block_k=bk
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
+def _onn_step_jit(w, sigma, bias, *, use_pallas, block_b, block_i, block_k):
+    TRACE_COUNTER["onn_step"] += 1
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -83,38 +116,41 @@ def onn_step(
     if not use_pallas:
         out = _ref.onn_step_ref(w, sig2d, h)
     else:
-        bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(n, block_i)
-        bk = _pick_block(n, block_k)
-        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
-        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
-        h_p = _k.pad_to_blocks(h, (bi,))
+        sig_p = _k.pad_to_blocks(sig2d, (block_b, block_k))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (block_i, block_k))
+        h_p = _k.pad_to_blocks(h, (block_i,))
         out = _k.onn_step_pallas(
-            sig_p, w_p, h_p, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret()
+            sig_p, w_p, h_p, block_b=block_b, block_i=block_i, block_k=block_k,
+            interpret=_interpret(),
         )[: sig2d.shape[0], :n]
     return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
 
 
-@functools.partial(jax.jit, static_argnames=("half", "use_pallas", "block_b", "block_i", "block_k"))
-def phase_step(
+def onn_step(
     w: jax.Array,
     sigma: jax.Array,
-    bias: jax.Array | None,
-    phase: jax.Array,
+    bias: jax.Array | None = None,
     *,
-    half: int,
     use_pallas: bool = True,
-    block_b: int = _k.DEFAULT_BLOCK_B,
-    block_i: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = _k.DEFAULT_BLOCK_K,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """Fused functional-mode cycle: θ' = phase-align(W σ + h, θ).
+    """Fused ONN phase-update step: σ' = sign-align(W σ + h)."""
+    n = w.shape[0]
+    bb, bi, bk = _resolve_blocks(
+        "step", _batch_extent(sigma), n, n, block_b, block_i, block_k
+    )
+    return _onn_step_jit(
+        w, sigma, bias, use_pallas=use_pallas, block_b=bb, block_i=bi, block_k=bk
+    )
 
-    ``sigma``/``phase`` of shape (N,) or (..., N); ``phase`` is returned in
-    its input dtype.  One kernel launch per oscillation cycle — the batched
-    ONN hot path (``repro.core.dynamics``, backend="pallas") lands here with
-    the full request batch as the real ``block_b`` grid dimension.
-    """
+
+@functools.partial(
+    jax.jit, static_argnames=("half", "use_pallas", "block_b", "block_i", "block_k")
+)
+def _phase_step_jit(w, sigma, bias, phase, *, half, use_pallas, block_b, block_i, block_k):
+    TRACE_COUNTER["phase_step"] += 1
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -124,33 +160,255 @@ def phase_step(
     if not use_pallas:
         out = _ref.phase_step_ref(w, sig2d, h, ph2d, half)
     else:
-        bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(n, block_i)
-        bk = _pick_block(n, block_k)
-        sig_p = _k.pad_to_blocks(sig2d, (bb, bk))
-        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, bk))
-        h_p = _k.pad_to_blocks(h, (bi,))
-        ph_p = _k.pad_to_blocks(ph2d, (bb, bi))
+        sig_p = _k.pad_to_blocks(sig2d, (block_b, block_k))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (block_i, block_k))
+        h_p = _k.pad_to_blocks(h, (block_i,))
+        ph_p = _k.pad_to_blocks(ph2d, (block_b, block_i))
         out = _k.phase_step_pallas(
             sig_p, w_p, h_p, ph_p,
-            half=half, block_b=bb, block_i=bi, block_k=bk, interpret=_interpret(),
+            half=half, block_b=block_b, block_i=block_i, block_k=block_k,
+            interpret=_interpret(),
         )[: sig2d.shape[0], :n]
     out = out.astype(phase.dtype)
     return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
 
 
+def phase_step(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
+    *,
+    half: int,
+    use_pallas: bool = True,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Fused functional-mode cycle: θ' = phase-align(W σ + h, θ).
+
+    ``sigma``/``phase`` of shape (N,) or (..., N); ``phase`` is returned in
+    its input dtype.  One kernel launch per oscillation cycle — the batched
+    ONN hot path (``repro.core.dynamics``, backend="pallas") lands here with
+    the full request batch as the real ``block_b`` grid dimension.
+    """
+    n = w.shape[0]
+    bb, bi, bk = _resolve_blocks(
+        "step", _batch_extent(sigma), n, n, block_b, block_i, block_k
+    )
+    return _phase_step_jit(
+        w, sigma, bias, phase,
+        half=half, use_pallas=use_pallas, block_b=bb, block_i=bi, block_k=bk,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("half", "use_pallas", "block_b", "block_i", "block_k")
+)
+def _phase_step_packed_jit(w, bias, phase, *, half, use_pallas, block_b, block_i, block_k):
+    TRACE_COUNTER["phase_step_packed"] += 1
+    from repro.core.quantization import pack_phases  # local: avoid import cycle
+
+    squeeze = phase.ndim == 1
+    batch_shape = phase.shape[:-1]
+    n = w.shape[0]
+    ph2d = phase.reshape(-1, n)
+    h = jnp.zeros((n,), jnp.int32) if bias is None else bias.astype(jnp.int32)
+    if not use_pallas:
+        out = _ref.phase_step_packed_ref(w, h, ph2d, half)
+    else:
+        # The packed array feeds both the σ-derivation tile (block_k columns)
+        # and the epilogue's keep-θ tile (block_i columns), so N pads to a
+        # common (even) multiple and W stays square at the padded size.
+        n_mult = max(block_i, block_k)
+        n_pad = -(-n // n_mult) * n_mult
+        ph_p = _k.pad_to_blocks(ph2d, (block_b, 0))
+        ph_p = jnp.pad(ph_p, ((0, 0), (0, n_pad - n)))
+        w_p = jnp.pad(w.astype(jnp.int8), ((0, n_pad - n), (0, n_pad - n)))
+        h_p = jnp.pad(h, (0, n_pad - n))
+        out = _k.phase_step_packed_pallas(
+            pack_phases(ph_p), w_p, h_p,
+            half=half, block_b=block_b, block_i=block_i, block_k=block_k,
+            interpret=_interpret(),
+        )[: ph2d.shape[0], :n]
+    out = out.astype(phase.dtype)
+    return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
+
+
+def phase_step_packed(
+    w: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
+    *,
+    half: int,
+    use_pallas: bool = True,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Packed-operand functional-mode cycle: θ' = phase-align(W σ(θ) + h, θ).
+
+    Takes *unpacked* (..., N) phase counters and no σ operand: σ is a pure
+    function of θ (σ = +1 iff θ < half), so the kernel derives it in-register
+    from the packed 4-bit layout (two counters per byte) and moves half the
+    σ/phase bytes per MAC tile.  Bit-exact with :func:`phase_step` fed
+    ``osc.spin(phase)``.
+    """
+    n = w.shape[0]
+    bb, bi, bk = _resolve_blocks(
+        "step", _batch_extent(phase), n, n, block_b, block_i, block_k
+    )
+    return _phase_step_packed_jit(
+        w, bias, phase,
+        half=half, use_pallas=use_pallas, block_b=bb, block_i=bi, block_k=bk,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "half", "chunk", "max_cycles", "packed", "use_pallas", "block_b"
+    ),
+)
+def _phase_step_multi_jit(
+    w, bias, phase, prev_phase, t, settle_cycle, settled, cycled, frozen,
+    frozen_p2, freeze_cycle, *, half, chunk, max_cycles, packed, use_pallas, block_b
+):
+    TRACE_COUNTER["phase_step_multi"] += 1
+    from repro.core.quantization import pack_phases, unpack_phases  # avoid cycle
+
+    b, n = phase.shape
+    h = jnp.zeros((n,), jnp.int32) if bias is None else bias.astype(jnp.int32)
+    cols = (t, settle_cycle, settled, cycled, frozen, frozen_p2, freeze_cycle)
+    cols32 = tuple(c.astype(jnp.int32)[:, None] for c in cols)
+    if not use_pallas:
+        outs = _ref.phase_step_multi_ref(
+            w, h, phase.astype(jnp.int32), prev_phase.astype(jnp.int32), *cols32,
+            half=half, chunk=chunk, max_cycles=max_cycles,
+        )
+        ph_o, prev_o = outs[0], outs[1]
+        flag_o = outs[2:]
+    else:
+        # N pads to an (even) lane multiple: padded oscillators carry θ = 0
+        # against zero weight rows/columns, so they never change and never
+        # perturb the all-lanes reductions.  Batch pads with born-frozen
+        # lanes (t = max_cycles), inert under the active mask.
+        n_pad = -(-n // 128) * 128
+        b_pad = -(-b // block_b) * block_b
+        w_p = jnp.pad(w.astype(jnp.int8), ((0, n_pad - n), (0, n_pad - n)))
+        h_p = jnp.pad(h, (0, n_pad - n))
+        ph_p = jnp.pad(phase.astype(jnp.int32), ((0, b_pad - b), (0, n_pad - n)))
+        prev_p = jnp.pad(prev_phase.astype(jnp.int32), ((0, b_pad - b), (0, n_pad - n)))
+        if packed:
+            ph_p = pack_phases(ph_p.astype(jnp.uint8))
+            prev_p = pack_phases(prev_p.astype(jnp.uint8))
+        pad_dead = ((0, b_pad - b), (0, 0))
+        t_p = jnp.pad(cols32[0], pad_dead, constant_values=max_cycles)
+        fz_p = jnp.pad(cols32[4], pad_dead, constant_values=1)
+        rest = [jnp.pad(cols32[i], pad_dead) for i in (1, 2, 3, 5, 6)]
+        outs = _k.phase_step_multi_pallas(
+            w_p, h_p, ph_p, prev_p, t_p, rest[0], rest[1], rest[2], fz_p,
+            rest[3], rest[4],
+            half=half, chunk=chunk, max_cycles=max_cycles, packed=packed,
+            block_b=block_b, interpret=_interpret(),
+        )
+        ph_o, prev_o = outs[0][:b], outs[1][:b]
+        if packed:
+            ph_o = unpack_phases(ph_o, n_pad).astype(jnp.int32)
+            prev_o = unpack_phases(prev_o, n_pad).astype(jnp.int32)
+        ph_o, prev_o = ph_o[:, :n], prev_o[:, :n]
+        flag_o = tuple(o[:b] for o in outs[2:])
+    sc_o, sd_o, cy_o, fz_o, fp2_o, fc_o, t_o = flag_o
+    return (
+        ph_o.astype(phase.dtype),
+        prev_o.astype(prev_phase.dtype),
+        sc_o[:, 0].astype(settle_cycle.dtype),
+        (sd_o[:, 0] != 0) if settled.dtype == jnp.bool_ else sd_o[:, 0].astype(settled.dtype),
+        (cy_o[:, 0] != 0) if cycled.dtype == jnp.bool_ else cy_o[:, 0].astype(cycled.dtype),
+        (fz_o[:, 0] != 0) if frozen.dtype == jnp.bool_ else fz_o[:, 0].astype(frozen.dtype),
+        (fp2_o[:, 0] != 0) if frozen_p2.dtype == jnp.bool_ else fp2_o[:, 0].astype(frozen_p2.dtype),
+        fc_o[:, 0].astype(freeze_cycle.dtype),
+        t_o[:, 0].astype(t.dtype),
+    )
+
+
+def phase_step_multi(
+    w: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
+    prev_phase: jax.Array,
+    t: jax.Array,
+    settle_cycle: jax.Array,
+    settled: jax.Array,
+    cycled: jax.Array,
+    frozen: jax.Array,
+    frozen_p2: jax.Array,
+    freeze_cycle: jax.Array,
+    *,
+    half: int,
+    chunk: int,
+    max_cycles: int,
+    packed: bool = False,
+    use_pallas: bool = True,
+    block_b: int | None = None,
+):
+    """Run ``chunk`` functional-mode cycles + settle/freeze bookkeeping in one
+    kernel launch (``phase_step_multi_pallas``): the weight matrix stays
+    resident in VMEM across all cycles instead of streaming once per cycle.
+
+    ``phase``/``prev_phase``: (B, N) phase counters (any integer dtype);
+    ``t``/``settle_cycle``/``freeze_cycle``: (B,) int32;
+    ``settled``/``cycled``/``frozen``/``frozen_p2``: (B,) bool.  Returns the
+    9-tuple (phase, prev_phase, settle_cycle, settled, cycled, frozen,
+    frozen_p2, freeze_cycle, t) in the input dtypes — exactly the per-cycle
+    bookkeeping of ``repro.core.dynamics._batch_step`` applied ``chunk``
+    times.  ``packed`` moves the phase state through the kernel boundary in
+    the 4-bit packed layout (two counters per byte).
+    """
+    b = phase.shape[0]
+    if block_b is None:
+        block_b = autotune.blocks_for("multi", n=phase.shape[1], batch=b).block_b
+    else:
+        block_b = _pick_block(b, block_b)
+    return _phase_step_multi_jit(
+        w, bias, phase, prev_phase, t, settle_cycle, settled, cycled, frozen,
+        frozen_p2, freeze_cycle,
+        half=half, chunk=chunk, max_cycles=max_cycles, packed=packed,
+        use_pallas=use_pallas, block_b=block_b,
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("parallel", "use_pallas", "block_b", "block_i", "block_k")
 )
+def _hybrid_coupling_sum_jit(w, sigma, *, parallel, use_pallas, block_b, block_i, block_k):
+    TRACE_COUNTER["hybrid_coupling_sum"] += 1
+    squeeze = sigma.ndim == 1
+    batch_shape = sigma.shape[:-1]
+    m, n = w.shape
+    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
+    if not use_pallas:
+        out = _ref.hybrid_coupling_sum_ref(w, sig2d, parallel)
+    else:
+        _, width = _k.hybrid_pass_groups(parallel, block_k)
+        sig_p = _k.pad_to_blocks(sig2d, (block_b, width))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (block_i, width))
+        out = _k.hybrid_coupling_sum_pallas(
+            sig_p, w_p, parallel=parallel, block_b=block_b, block_i=block_i,
+            block_k=block_k, interpret=_interpret(),
+        )[: sig2d.shape[0], :m]
+    return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
+
+
 def hybrid_coupling_sum(
     w: jax.Array,
     sigma: jax.Array,
     *,
     parallel: int,
     use_pallas: bool = True,
-    block_b: int = _k.DEFAULT_BLOCK_B,
-    block_i: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = _k.DEFAULT_BLOCK_K,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
     """S = W σ through the hybrid serialized pass-group schedule.
 
@@ -160,49 +418,24 @@ def hybrid_coupling_sum(
     Bit-exact with :func:`coupling_sum` for every P.  Like
     :func:`coupling_sum`, ``w`` may be a (M, N) row slab.
     """
-    squeeze = sigma.ndim == 1
-    batch_shape = sigma.shape[:-1]
     m, n = w.shape
-    sig2d = sigma.reshape(-1, n).astype(jnp.int8)
-    if not use_pallas:
-        out = _ref.hybrid_coupling_sum_ref(w, sig2d, parallel)
-    else:
-        bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(m, block_i)
-        bk = _pick_block(n, block_k)
-        _, width = _k.hybrid_pass_groups(parallel, bk)
-        sig_p = _k.pad_to_blocks(sig2d, (bb, width))
-        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, width))
-        out = _k.hybrid_coupling_sum_pallas(
-            sig_p, w_p, parallel=parallel, block_b=bb, block_i=bi, block_k=bk,
-            interpret=_interpret(),
-        )[: sig2d.shape[0], :m]
-    return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
+    bb, bi, bk = _resolve_blocks(
+        "hybrid", _batch_extent(sigma), m, n, block_b, block_i, block_k
+    )
+    return _hybrid_coupling_sum_jit(
+        w, sigma, parallel=parallel, use_pallas=use_pallas,
+        block_b=bb, block_i=bi, block_k=bk,
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("half", "parallel", "use_pallas", "block_b", "block_i", "block_k"),
 )
-def hybrid_phase_step(
-    w: jax.Array,
-    sigma: jax.Array,
-    bias: jax.Array | None,
-    phase: jax.Array,
-    *,
-    half: int,
-    parallel: int,
-    use_pallas: bool = True,
-    block_b: int = _k.DEFAULT_BLOCK_B,
-    block_i: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = _k.DEFAULT_BLOCK_K,
-) -> jax.Array:
-    """Fused hybrid functional-mode cycle: θ' = phase-align(W σ + h, θ) with
-    the coupling sum serialized into pass-group launches of MAC width
-    ``parallel``.  Same calling convention as :func:`phase_step`; the
-    batched ONN hot path (backend="hybrid", hybrid_impl="pallas") lands
-    here with the request batch as a real grid dimension.
-    """
+def _hybrid_phase_step_jit(
+    w, sigma, bias, phase, *, half, parallel, use_pallas, block_b, block_i, block_k
+):
+    TRACE_COUNTER["hybrid_phase_step"] += 1
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -212,35 +445,54 @@ def hybrid_phase_step(
     if not use_pallas:
         out = _ref.hybrid_phase_step_ref(w, sig2d, h, ph2d, half, parallel)
     else:
-        bb = _pick_block(sig2d.shape[0], block_b)
-        bi = _pick_block(n, block_i)
-        bk = _pick_block(n, block_k)
-        _, width = _k.hybrid_pass_groups(parallel, bk)
-        sig_p = _k.pad_to_blocks(sig2d, (bb, width))
-        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (bi, width))
-        h_p = _k.pad_to_blocks(h, (bi,))
-        ph_p = _k.pad_to_blocks(ph2d, (bb, bi))
+        _, width = _k.hybrid_pass_groups(parallel, block_k)
+        sig_p = _k.pad_to_blocks(sig2d, (block_b, width))
+        w_p = _k.pad_to_blocks(w.astype(jnp.int8), (block_i, width))
+        h_p = _k.pad_to_blocks(h, (block_i,))
+        ph_p = _k.pad_to_blocks(ph2d, (block_b, block_i))
         out = _k.hybrid_phase_step_pallas(
             sig_p, w_p, h_p, ph_p,
             half=half, parallel=parallel,
-            block_b=bb, block_i=bi, block_k=bk, interpret=_interpret(),
+            block_b=block_b, block_i=block_i, block_k=block_k,
+            interpret=_interpret(),
         )[: sig2d.shape[0], :n]
     out = out.astype(phase.dtype)
     return out.reshape(n) if squeeze else out.reshape(*batch_shape, n)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
-def quantized_matvec(
-    w_q: jax.Array,
-    scale: jax.Array,
-    x: jax.Array,
+def hybrid_phase_step(
+    w: jax.Array,
+    sigma: jax.Array,
+    bias: jax.Array | None,
+    phase: jax.Array,
     *,
+    half: int,
+    parallel: int,
     use_pallas: bool = True,
-    block_b: int = 8,
-    block_m: int = _k.DEFAULT_BLOCK_I,
-    block_k: int = 512,
+    block_b: int | None = None,
+    block_i: int | None = None,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """y = (W_q · scale) @ x with per-row scale; x: (..., K) f32."""
+    """Fused hybrid functional-mode cycle: θ' = phase-align(W σ + h, θ) with
+    the coupling sum serialized into pass-group launches of MAC width
+    ``parallel``.  Same calling convention as :func:`phase_step`; the
+    batched ONN hot path (backend="hybrid", hybrid_impl="pallas") lands
+    here with the request batch as a real grid dimension.
+    """
+    n = w.shape[0]
+    bb, bi, bk = _resolve_blocks(
+        "hybrid", _batch_extent(sigma), n, n, block_b, block_i, block_k
+    )
+    return _hybrid_phase_step_jit(
+        w, sigma, bias, phase,
+        half=half, parallel=parallel, use_pallas=use_pallas,
+        block_b=bb, block_i=bi, block_k=bk,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
+def _quantized_matvec_jit(w_q, scale, x, *, use_pallas, block_b, block_m, block_k):
+    TRACE_COUNTER["quantized_matvec"] += 1
     squeeze = x.ndim == 1
     batch_shape = x.shape[:-1]
     m, kdim = w_q.shape
@@ -249,13 +501,31 @@ def quantized_matvec(
     if not use_pallas:
         out = _ref.quantized_matvec_ref(w_q, scale_full, x2d)
     else:
-        bb = _pick_block(x2d.shape[0], block_b)
-        bm = _pick_block(m, block_m)
-        bk = _pick_block(kdim, block_k, minimum=128)
-        x_p = _k.pad_to_blocks(x2d, (bb, bk))
-        w_p = _k.pad_to_blocks(w_q.astype(jnp.int8), (bm, bk))
-        s_p = _k.pad_to_blocks(scale_full, (bm,))
+        x_p = _k.pad_to_blocks(x2d, (block_b, block_k))
+        w_p = _k.pad_to_blocks(w_q.astype(jnp.int8), (block_m, block_k))
+        s_p = _k.pad_to_blocks(scale_full, (block_m,))
         out = _k.quantized_matvec_pallas(
-            x_p, w_p, s_p, block_b=bb, block_m=bm, block_k=bk, interpret=_interpret()
+            x_p, w_p, s_p, block_b=block_b, block_m=block_m, block_k=block_k,
+            interpret=_interpret(),
         )[: x2d.shape[0], :m]
     return out.reshape(m) if squeeze else out.reshape(*batch_shape, m)
+
+
+def quantized_matvec(
+    w_q: jax.Array,
+    scale: jax.Array,
+    x: jax.Array,
+    *,
+    use_pallas: bool = True,
+    block_b: int | None = None,
+    block_m: int | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """y = (W_q · scale) @ x with per-row scale; x: (..., K) f32."""
+    m, kdim = w_q.shape
+    bb, bm, bk = _resolve_blocks(
+        "matvec", _batch_extent(x), m, kdim, block_b, block_m, block_k, k_minimum=128
+    )
+    return _quantized_matvec_jit(
+        w_q, scale, x, use_pallas=use_pallas, block_b=bb, block_m=bm, block_k=bk
+    )

@@ -26,6 +26,7 @@ import jax
 
 from repro.engine import bucketing
 from repro.engine.engine import Engine, Request, _Pending
+from repro.kernels import autotune
 from repro.serving.admission import FairQueues
 
 
@@ -324,5 +325,6 @@ class ContinuousEngine(Engine):
             "lanes_in_flight": lanes_live,
             "slab_occupancy": 0.0 if width == 0 else lanes_live / width,
             "queued_by_tenant": self._fair.depths(),
+            "autotune": autotune.cache_info(),
         }
         return out
