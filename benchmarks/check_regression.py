@@ -3,11 +3,12 @@
 The perf trajectory of this repo is tracked *in-repo*: the smoke outputs of
 ``benchmarks/engine.py``, ``benchmarks/dynamics.py``,
 ``benchmarks/hybrid_scaling.py``, ``benchmarks/maxcut.py``,
-``benchmarks/serving.py``, ``benchmarks/capacity.py`` and
-``benchmarks/kernels.py`` are committed at
+``benchmarks/serving.py``, ``benchmarks/capacity.py``,
+``benchmarks/kernels.py`` and ``benchmarks/sharding.py`` are committed at
 the repository root (``BENCH_engine.json`` / ``BENCH_dynamics.json`` /
 ``BENCH_hybrid.json`` / ``BENCH_ising.json`` / ``BENCH_serving.json`` /
-``BENCH_capacity.json`` / ``BENCH_kernels.json``).  This gate re-runs each
+``BENCH_capacity.json`` / ``BENCH_kernels.json`` /
+``BENCH_sharding.json``).  This gate re-runs each
 smoke benchmark, extracts the wall-clock metrics, and fails (exit 1) when
 any metric regresses by more than ``--threshold`` (default 25 %) against
 its baseline.
@@ -43,6 +44,7 @@ BENCH_METRICS: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
     "serving": (("mode",), ("wall_s", "p50_s", "p99_s")),
     "capacity": (("n", "rule"), ("train_s",)),
     "kernels": (("kernel", "n", "batch"), ("fused_s", "percycle_s", "fallback_s")),
+    "sharding": (("n", "mesh"), ("replicated_s", "sharded_s")),
 }
 
 BASELINE_FILES = {name: f"BENCH_{name}.json" for name in BENCH_METRICS}
@@ -64,6 +66,8 @@ def _run_fresh(name: str, out_path: str) -> None:
         from benchmarks import capacity as mod
     elif name == "kernels":
         from benchmarks import kernels as mod
+    elif name == "sharding":
+        from benchmarks import sharding as mod
     else:
         raise ValueError(f"unknown benchmark {name!r}")
     mod.main(smoke=True, out=out_path)

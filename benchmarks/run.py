@@ -44,7 +44,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         capacity, comparison, dynamics, engine, hybrid_scaling, kernels,
-        maxcut, retrieval, roofline, scaling, serving,
+        maxcut, retrieval, roofline, scaling, serving, sharding,
     )
 
     sections = [
@@ -59,6 +59,7 @@ def main(argv=None) -> int:
         ("dynamics_early_exit", dynamics.main, {"smoke": args.quick}),
         ("hybrid_serialization", hybrid_scaling.main, {"smoke": args.quick}),
         ("serving_continuous_batching", serving.main, {"smoke": args.quick}),
+        ("model_parallel_sharding", sharding.main, {"smoke": args.quick}),
     ]
     t_all = time.time()
     failures = run_sections(sections)

@@ -16,7 +16,7 @@ replicated per row shard.
 from __future__ import annotations
 
 
-from repro.core.onn import ONNConfig
+from repro.core.dynamics import ONNConfig
 
 ONN_RECURRENT_48 = ONNConfig(n=48, architecture="recurrent", mode="functional")
 ONN_HYBRID_506 = ONNConfig(n=506, architecture="hybrid", mode="functional")

@@ -3,8 +3,8 @@
 # Ising-machine embedding, and the FPGA hardware-scaling cost model.
 #
 # The simulation core is the functional pytree API in repro.core.dynamics
-# (OnnParams/OnnState + init_state/step/run/retrieve); the ONN class is a
-# deprecated shim kept for old imports.
+# (OnnParams/OnnState + init_state/step/run/retrieve).  The legacy class
+# shim (repro.core.onn.ONN, deprecated since PR 1) has been removed.
 from repro.core.dynamics import (  # noqa: F401
     BACKENDS,
     ONNConfig,
@@ -24,7 +24,6 @@ from repro.core.dynamics import (  # noqa: F401
     validate_weights,
     weighted_sum,
 )
-from repro.core.onn import ONN  # noqa: F401  (deprecated wrapper)
 from repro.core.quantization import (  # noqa: F401
     QuantizedWeights,
     quantize_weights,

@@ -60,7 +60,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -91,8 +90,12 @@ class ONNConfig:
 
     This is the only static argument of the functional API: everything
     numeric (weights, bias, phases) is traced.  ``backend`` selects the
-    weighted-sum schedule; the deprecated ``use_kernel`` flag and a bare
-    ``serial_chunk > 0`` are folded into it for backward compatibility.
+    weighted-sum schedule; ``__post_init__`` is the single documented entry
+    point for legacy-flag normalization — a bare ``serial_chunk > 0`` folds
+    into ``backend="serial"`` and a bare ``parallel_factor > 0`` into
+    ``backend="hybrid"``, so old and new spellings of one schedule hash
+    equal and share one jit executable.  (The ``use_kernel`` alias for
+    ``backend="pallas"``, deprecated since PR 1, has been removed.)
     """
 
     n: int
@@ -104,7 +107,6 @@ class ONNConfig:
     sync_jitter: bool = False  # randomize enable-signal offset (rtl hybrid)
     backend: str = "parallel"  # "parallel" | "serial" | "pallas" | "hybrid"
     serial_chunk: int = 0  # block size for backend="serial" (0 → auto)
-    use_kernel: bool = False  # deprecated: alias for backend="pallas"
     #: Parallelism P of the ``hybrid`` backend: the coupling sum is computed
     #: in ``ceil(n / P)`` serialized passes of P-wide integer MACs (the
     #: paper's serialized-MAC datapath with P parallel coupling elements).
@@ -147,26 +149,7 @@ class ONNConfig:
         # and a new-style spelling of the same schedule hash equal and share
         # one jit executable.  Contradictory combinations raise rather than
         # silently dropping a flag.
-        if self.use_kernel:
-            warnings.warn(
-                "ONNConfig(use_kernel=True) is deprecated; pass "
-                'backend="pallas" instead',
-                DeprecationWarning,
-                stacklevel=3,
-            )
-            if self.backend not in ("parallel", "pallas"):
-                raise ValueError(
-                    f"use_kernel=True (deprecated) conflicts with explicit "
-                    f"backend={self.backend!r}; drop use_kernel"
-                )
-            if self.serial_chunk > 0:
-                raise ValueError(
-                    "use_kernel=True conflicts with serial_chunk>0; pick one "
-                    "backend explicitly"
-                )
-            object.__setattr__(self, "backend", "pallas")
-            object.__setattr__(self, "use_kernel", False)
-        elif self.backend == "parallel" and self.serial_chunk > 0:
+        if self.backend == "parallel" and self.serial_chunk > 0:
             if self.parallel_factor > 0:
                 raise ValueError(
                     "serial_chunk>0 and parallel_factor>0 are contradictory "
@@ -455,8 +438,90 @@ BACKENDS = {
 }
 
 
+def _model_plan():
+    """The active (ShardPlan, Mesh) pair if the row-sharded collective is on.
+
+    Trace-time state, like ``_shard_lanes``: the batched entry points
+    discriminate their jit caches on :func:`_sharding_cache_key` (which
+    includes the plan), so consulting a thread-local here is safe.
+    """
+    from repro.distributed import sharding as shard_lib
+
+    plan, mesh = shard_lib.current_plan(), shard_lib.current_mesh()
+    if plan is None or mesh is None or not plan.model_sharded:
+        return None
+    return plan, mesh
+
+
+def _model_sharded_sum(
+    cfg: ONNConfig, w: jax.Array, sigma: jax.Array, plan, mesh
+) -> jax.Array:
+    """S = W σ as a row-sharded ``shard_map`` collective over ``"model"``.
+
+    The software analogue of partitioning the coupling fabric across boards:
+    W's rows are split over the ``"model"`` mesh axis, each device runs the
+    *configured backend* (parallel / serial / pallas / hybrid — so the fused
+    int8 MAC kernels execute per-device on their row block against the full
+    σ), scatters its partial fields into a zero buffer at its block offset,
+    and a ``psum`` combines them.  The blocks are disjoint and the zeros of
+    other devices are exact, so the integer combine is bit-exact with the
+    single-device path for every backend — at any N, including N not
+    divisible by the model degree (W is zero-row padded first; padding rows
+    is the established bit-exact invariant from ``pad_instance``).
+
+    ``w`` may be a row slab (M ≤ N rows — the Ising window path); σ keeps
+    the full contraction width N.  When the plan also data-parallelizes and
+    the σ batch divides it, lanes split over ``"data"`` so both mesh axes do
+    real work.  ``plan.compressed`` swaps the exact int32 combine for the
+    int8 wire format :func:`repro.optim.compress.compressed_psum_scatter`.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m = w.shape[0]
+    parts = plan.model
+    m_pad = -(-m // parts) * parts
+    if m_pad != m:
+        w = jnp.pad(w, ((0, m_pad - m), (0, 0)))
+    blk = m_pad // parts
+
+    def local_block(wb: jax.Array, s: jax.Array) -> jax.Array:
+        part = BACKENDS[cfg.backend](cfg, wb, s)  # (..., blk) int32
+        idx = jax.lax.axis_index("model")
+        if plan.compressed:
+            from repro.optim import compress
+
+            return compress.compressed_psum_scatter(part, idx, parts, "model")
+        buf = jnp.zeros(part.shape[:-1] + (m_pad,), jnp.int32)
+        buf = jax.lax.dynamic_update_slice_in_dim(buf, part, idx * blk, axis=-1)
+        return jax.lax.psum(buf, "model")
+
+    lead = None
+    if sigma.ndim == 2 and plan.batch > 1 and sigma.shape[0] % plan.batch == 0:
+        lead = "data"
+    sigma_spec = P(*([lead] + [None] * (sigma.ndim - 1)))
+    out_spec = P(*([lead] + [None] * (sigma.ndim - 1)))
+    out = shard_map(
+        local_block,
+        mesh=mesh,
+        in_specs=(P("model", None), sigma_spec),
+        out_specs=out_spec,
+        check_rep=False,
+    )(w, sigma)
+    return out[..., :m] if m_pad != m else out
+
+
 def weighted_sum(cfg: ONNConfig, w: jax.Array, sigma: jax.Array) -> jax.Array:
-    """S = W σ through the backend selected by ``cfg.backend``."""
+    """S = W σ through the backend selected by ``cfg.backend``.
+
+    Under an active model-sharded :class:`repro.distributed.ShardPlan` the
+    backend runs per-device on its coupling-matrix row block inside a
+    ``shard_map`` collective (:func:`_model_sharded_sum`) — bit-exact with
+    the single-device schedule.
+    """
+    pm = _model_plan()
+    if pm is not None:
+        return _model_sharded_sum(cfg, w, sigma, *pm)
     return BACKENDS[cfg.backend](cfg, w, sigma)
 
 
@@ -484,8 +549,15 @@ def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> ja
     kernel followed by elementwise alignment.  With ``cfg.phase_pack`` the
     launch takes a single *packed* operand (two 4-bit counters per byte)
     and derives σ from θ in-register.  Bit-exact every way.
+
+    Under a model-sharded ShardPlan the fused whole-cycle launches are
+    bypassed — they need the full square W resident — and the cycle runs as
+    coupling collective + bias + alignment instead; the pallas/hybrid MAC
+    kernels still execute, per-device on their row block inside the
+    ``shard_map`` of :func:`_model_sharded_sum`.  Bit-exact either way.
     """
-    if cfg.backend == "pallas":
+    model_sharded = _model_plan() is not None
+    if cfg.backend == "pallas" and not model_sharded:
         from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
 
         half = osc.n_positions(cfg.phase_bits) // 2
@@ -498,7 +570,7 @@ def functional_update(cfg: ONNConfig, params: OnnParams, phase: jax.Array) -> ja
             params.weights, sigma, params.bias, phase, half=half
         )
     sigma = osc.spin(phase, cfg.phase_bits)
-    if cfg.backend == "hybrid" and cfg.hybrid_impl == "pallas":
+    if cfg.backend == "hybrid" and cfg.hybrid_impl == "pallas" and not model_sharded:
         from repro.kernels import ops as kernel_ops  # lazy: kernels are optional
 
         half = osc.n_positions(cfg.phase_bits) // 2
@@ -986,7 +1058,11 @@ def _advance_chunk_batched(
     All routes are bit-exact with ``chunk`` iterations of ``_batch_step``.
     """
     if cfg.mode == "functional":
-        if _multi_kernel_eligible(cfg):
+        # The multi-cycle kernel keeps the full square W resident in VMEM,
+        # which a model-sharded plan has deliberately split; fall through to
+        # the fused scan, whose per-cycle weighted sums run the row-sharded
+        # collective (bit-exact — see _model_sharded_sum).
+        if _multi_kernel_eligible(cfg) and _model_plan() is None:
             return _chunk_multi(cfg, params, state, chunk)
         return _chunk_fused(cfg, params, state, chunk)
     return jax.lax.fori_loop(
@@ -1095,24 +1171,27 @@ def _require_keys_if_random(cfg: ONNConfig, keys: Optional[jax.Array], what: str
 
 
 def _sharding_cache_key() -> Optional[Tuple]:
-    """The active sharding rules/mesh context as a jit-cache discriminator.
+    """The active sharding rules/mesh/plan context as a jit-cache key.
 
-    ``_shard_lanes``/``_constrain_params`` bake ``with_sharding_constraint``
-    ops in at *trace* time from a thread-local context that ``jax.jit``'s
-    cache key knows nothing about.  The batched entry points therefore pass
-    this key as an extra *static* argument (None outside any context), so
-    each context traces its own executable — otherwise whichever call
-    happened first would decide whether a mesh context actually shards (a
-    warmed-up cache would make ``--shard-batch`` silently a no-op, and the
-    reverse order would leak mesh-bound executables outside the context).
+    ``_shard_lanes``/``_constrain_params``/``_model_plan`` bake sharding
+    constraints and the shard_map collective in at *trace* time from a
+    thread-local context that ``jax.jit``'s cache key knows nothing about.
+    The batched entry points therefore pass this key as an extra *static*
+    argument (None outside any context), so each context traces its own
+    executable — otherwise whichever call happened first would decide
+    whether a mesh context actually shards (a warmed-up cache would make
+    ``--mesh`` silently a no-op, and the reverse order would leak mesh-bound
+    executables outside the context).  The :class:`ShardPlan` is a frozen
+    hashable dataclass, so it rides the key directly.
     """
     from repro.distributed import sharding as shard_lib
 
     rules, mesh = shard_lib.current_rules(), shard_lib.current_mesh()
-    if rules is None and mesh is None:
+    plan = shard_lib.current_plan()
+    if rules is None and mesh is None and plan is None:
         return None
     rules_key = None if rules is None else tuple(sorted(rules.items()))
-    return (rules_key, mesh)
+    return (rules_key, mesh, plan)
 
 
 # ---------------------------------------------------------------------------
@@ -1132,7 +1211,17 @@ def _run(
     return _run_rtl(cfg, params, phase0, key)
 
 
-@partial(jax.jit, static_argnums=0)
+@partial(jax.jit, static_argnums=(0, 4))
+def _run_traced(
+    cfg: ONNConfig,
+    params: OnnParams,
+    phase0: jax.Array,
+    key: Optional[jax.Array] = None,
+    _ctx: Optional[Tuple] = None,  # static sharding-context discriminator
+) -> ONNResult:
+    return _run(cfg, params, phase0, key)
+
+
 def run(
     cfg: ONNConfig,
     params: OnnParams,
@@ -1144,11 +1233,11 @@ def run(
     ``phase0``: (N,) uint8 initial phases.  ``key`` seeds the enable-signal
     jitter (rtl mode with ``sync_jitter``); ignored otherwise and may be None.
 
-    Only ``cfg`` is static: two different weight matrices of the same N reuse
-    one compiled executable, and ``jax.vmap(run, in_axes=(None, 0, None))``
-    batches over *problems*.
+    Only ``cfg`` (plus the ambient sharding context) is static: two
+    different weight matrices of the same N reuse one compiled executable,
+    and ``jax.vmap(run, in_axes=(None, 0, None))`` batches over *problems*.
     """
-    return _run(cfg, params, phase0, key)
+    return _run_traced(cfg, params, phase0, key, _sharding_cache_key())
 
 
 @partial(jax.jit, static_argnums=(0, 4))

@@ -237,6 +237,124 @@ def max_oscillators(
     return lo
 
 
+# ---------------------------------------------------------------------------
+# Partitioned multi-FPGA hybrid (the paper §6 outlook: row-sharding the
+# coupling matrix over K boards — the hardware twin of the software
+# ShardPlan model axis in repro.distributed).
+# ---------------------------------------------------------------------------
+
+#: Single-bit amplitudes exchanged per inter-board link clock (one 64-wide
+#: LVDS-class parallel link; each update every board must learn all N
+#: amplitudes before its next MAC sweep).
+_PARTITION_LINK_WIDTH = 64
+#: Candidate board counts: powers of two up to a rack's worth.
+_PARTITION_BOARDS = (2, 4, 8, 16, 32, 64)
+
+
+def partitioned_resources(
+    n: int, boards: int, bits: BitConfig = BitConfig(), parallel: int = 1
+) -> Dict[str, int]:
+    """Per-board LUT/FF/DSP/BRAM of an N-oscillator hybrid split over K boards.
+
+    Row partition: each board owns ``r = ceil(N / K)`` oscillators — their
+    P-wide MAC lanes, accumulators and weight rows — but every row still
+    sums over all N columns, so the datapath *widths* (accumulator,
+    amplitude mux, address counter) and the BRAM row length stay functions
+    of the full N; only the per-oscillator replication count drops to r.
+    ``boards = 1`` reduces exactly to :func:`hybrid_resources`.
+    """
+    if boards <= 0:
+        raise ValueError(f"boards must be positive, got {boards}")
+    w = bits.weight_bits
+    acc = _acc_width(n, w)
+    addr = max(1, math.ceil(math.log2(n)))
+    p = _check_parallel(n, parallel)
+    r = -(-n // boards)  # rows on the fullest board
+    macs = r * p
+    lut = r * (
+        2.0 * acc
+        + _HA_LUT_MUX_COEF * math.ceil(n / 64)
+        + addr
+        + _HA_LUT_CONTROL_PER_OSC
+        + (p - 1) * ((w + acc) / 2.0) * _RA_LUT_PER_ADDER_BIT
+    )
+    ff = r * (
+        bits.registers_per_oscillator
+        + acc
+        + addr
+        + (acc + 1)
+        + _HA_FF_CONTROL_PER_OSC
+        + (p - 1) * _RA_FF_PER_ADDER
+    )
+    dsp = math.ceil(macs / _HA_MACS_PER_DSP - 1e-9)
+    bram_ports = math.ceil(macs / _HA_MACS_PER_BRAM - 1e-9)
+    bram_capacity = math.ceil(r * n * w / 36_864)  # each board stores r rows
+    bram = max(bram_ports, bram_capacity)
+    return {"lut": int(round(lut)), "ff": int(round(ff)), "dsp": dsp, "bram": bram}
+
+
+def partition_fits(
+    n: int,
+    boards: int,
+    bits: BitConfig = BitConfig(),
+    budget=None,
+    parallel: int = 1,
+) -> bool:
+    """Does each board of the K-way row partition fit its own budget?"""
+    budget = budget or ZYNQ_7020
+    r = partitioned_resources(n, boards, bits, parallel)
+    return all(
+        r[k] <= budget[k] * _ROUTE_CEILING[k] for k in ("lut", "ff", "dsp", "bram")
+    )
+
+
+def min_boards(
+    n: int, bits: BitConfig = BitConfig(), budget=None, parallel: int = 1
+):
+    """Smallest power-of-two board count whose partition fits, else ``None``.
+
+    ``1`` when the single-board hybrid already fits (no partition needed);
+    ``None`` when even 64 boards cannot hold N — per-board cost has an
+    N-proportional floor (full-width mux + BRAM row length per oscillator),
+    so capacity does not scale to arbitrary N by adding boards alone.
+    """
+    if fits("hybrid", n, bits, budget, parallel):
+        return 1
+    for k in _PARTITION_BOARDS:
+        if partition_fits(n, k, bits, budget, parallel):
+            return k
+    return None
+
+
+def partitioned_time_to_solution(
+    n: int,
+    boards: int,
+    cycles: float,
+    bits: BitConfig = BitConfig(),
+    parallel: int = 1,
+) -> float:
+    """Seconds for ``cycles`` oscillation cycles on the K-board partition.
+
+    The fast-clock fmax recovers with the *per-board* design size (routing
+    congestion is local to a board), but every phase update now pays an
+    inter-board exchange: ``ceil(N / link_width)`` fast clocks to broadcast
+    the new single-bit amplitudes over the 64-wide board-to-board link
+    before the next MAC sweep — the hardware analogue of the software
+    collective's psum.  ``boards = 1`` reduces to
+    ``time_to_solution("hybrid", ...)``.
+    """
+    if boards <= 0:
+        raise ValueError(f"boards must be positive, got {boards}")
+    p = _check_parallel(n, parallel)
+    r = -(-n // boards)
+    fmax = _HA_FMAX_REF * (506.0 / max(r, 1)) ** (-_HA_FMAX_SLOPE)
+    updates_per_period = 1 << bits.phase_bits
+    passes = -(-n // p)
+    exchange = 0 if boards == 1 else -(-n // _PARTITION_LINK_WIDTH)
+    f_osc = fmax / (updates_per_period * (passes + exchange + _HA_SERIAL_OVERHEAD))
+    return cycles / f_osc
+
+
 def utilization(
     arch: str, n: int, bits: BitConfig = BitConfig(), budget=None, parallel: int = 1
 ) -> Dict[str, float]:

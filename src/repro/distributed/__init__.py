@@ -1,0 +1,9 @@
+"""Distributed execution: sharding rules, the ShardPlan API, fault tolerance.
+
+The public surface for parallel solves is :class:`ShardPlan`
+(:mod:`repro.distributed.plan`); the rule-table/logical-axis layer
+(:mod:`repro.distributed.sharding`) and the fault-tolerance primitives
+(:mod:`repro.distributed.ft`) remain importable as submodules.
+"""
+
+from repro.distributed.plan import ShardPlan, plan_of_legacy_shard_batch  # noqa: F401

@@ -18,12 +18,15 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Dict, Optional
+from typing import TYPE_CHECKING, Any, Dict, Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.params import logical_to_pspec
+
+if TYPE_CHECKING:  # pragma: no cover — annotation only (no import cycle)
+    from repro.distributed.plan import ShardPlan
 
 _state = threading.local()
 
@@ -63,14 +66,31 @@ def long_context_rules(multi_pod: bool = False) -> Dict[str, Any]:
 
 
 @contextlib.contextmanager
-def use_rules(rules: Optional[Dict[str, Any]], mesh: Optional[Mesh] = None):
-    """Activate a rule table (and optionally a mesh) for model tracing."""
+def use_rules(
+    rules: Optional[Dict[str, Any]],
+    mesh: Optional[Mesh] = None,
+    plan: Optional["ShardPlan"] = None,
+):
+    """Activate a rule table (and optionally a mesh + ShardPlan) for tracing."""
     prev = getattr(_state, "ctx", None)
-    _state.ctx = (rules, mesh)
+    _state.ctx = (rules, mesh, plan)
     try:
         yield
     finally:
         _state.ctx = prev
+
+
+def use_plan(plan: "ShardPlan", mesh: Mesh):
+    """Activate a :class:`repro.distributed.plan.ShardPlan` over ``mesh``.
+
+    Synthesizes the minimal rule table the batched dynamics need (lanes →
+    the ``"data"`` axis when the plan data-parallelizes) so ``shard`` and
+    ``constrain_onn`` work unchanged; the plan itself is what
+    ``current_plan`` / ``dynamics._model_plan`` consult for the row-sharded
+    weighted-sum collective.  Prefer ``plan.context(mesh)``, which wraps this.
+    """
+    rules = {"batch": "data" if plan.batch > 1 else None}
+    return use_rules(rules, mesh, plan)
 
 
 def current_rules() -> Optional[Dict[str, Any]]:
@@ -83,12 +103,17 @@ def current_mesh() -> Optional[Mesh]:
     return ctx[1] if ctx else None
 
 
+def current_plan() -> Optional["ShardPlan"]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[2] if ctx and len(ctx) > 2 else None
+
+
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """Apply a sharding constraint by logical axis names (no-op outside rules)."""
     ctx = getattr(_state, "ctx", None)
     if not ctx or ctx[0] is None:
         return x
-    rules, mesh = ctx
+    rules, mesh = ctx[0], ctx[1]
     if mesh is not None:
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         spec = logical_to_pspec(tuple(axes), rules, tuple(x.shape), sizes)
@@ -107,10 +132,19 @@ def data_spec(rules: Dict[str, Any], *axes: Optional[str]) -> P:
 # ---------------------------------------------------------------------------
 
 
-def onn_weight_spec(multi_pod: bool = False, layout: str = "row") -> P:
-    """PartitionSpec for the (N, N) coupling matrix on the production mesh.
+def onn_weight_spec(
+    multi_pod: bool = False,
+    layout: str = "row",
+    plan: Optional["ShardPlan"] = None,
+) -> P:
+    """PartitionSpec for the (N, N) coupling matrix.
 
-    ``layout``:
+    Under a :class:`ShardPlan` (``plan`` given) the spec maps the plan's
+    layout onto the plan mesh axes — ``"row"`` shards W rows over ONLY the
+    ``"model"`` axis (replicated across ``"data"``, whose devices each hold
+    their lane slice against the full row block), ``"replicated"`` puts W
+    everywhere.  Without a plan, the legacy production-mesh layouts:
+
       * ``"row"``        — rows over ALL mesh axes (no contraction psum;
         the σ' all-gather is the only collective).  Default for large N.
       * ``"2d"``         — P("model", "data") 2-D sharding (paper-faithful
@@ -118,6 +152,10 @@ def onn_weight_spec(multi_pod: bool = False, layout: str = "row") -> P:
       * ``"replicated"`` — W on every chip (FPGA-scale N; parallelism is
         over the request batch instead).
     """
+    if plan is not None:
+        if plan.model_sharded:
+            return P("model", None)
+        return P(None, None)
     all_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     if layout == "row":
         return P(all_axes, None)
@@ -129,43 +167,86 @@ def onn_weight_spec(multi_pod: bool = False, layout: str = "row") -> P:
 
 
 def onn_param_shardings(
-    mesh: Mesh, multi_pod: bool = False, layout: str = "row"
+    mesh: Mesh,
+    multi_pod: bool = False,
+    layout: str = "row",
+    plan: Optional["ShardPlan"] = None,
 ):
     """``OnnParams``-shaped NamedShardings: shard W, replicate the bias.
 
     Because the functional API traces params, ``jax.device_put(params,
     onn_param_shardings(mesh))`` reshards a live solver without recompiling
-    ``run``/``retrieve`` for a new weight matrix of the same N.
+    ``run``/``retrieve`` for a new weight matrix of the same N.  Pass
+    ``plan=`` to place the weights for that plan's layout (row-sharded over
+    the ``"model"`` axis when the plan model-parallelizes).
     """
     from repro.core.dynamics import OnnParams
 
     return OnnParams(
-        weights=NamedSharding(mesh, onn_weight_spec(multi_pod, layout)),
+        weights=NamedSharding(mesh, onn_weight_spec(multi_pod, layout, plan)),
         bias=NamedSharding(mesh, P(None)),
     )
 
 
-def constrain_onn(params, layout: str = "replicated"):
+def constrain_onn(params, layout: Optional[str] = None):
     """Sharding-constrain ``OnnParams`` inside a traced solve.
 
     The in-jit companion of :func:`onn_param_shardings`: the batched solve
     (``repro.core.dynamics.run_batch``/``retrieve``) calls this on its params
     so that, under an active mesh, the coupling matrix is pinned to the
-    requested layout while the request batch splits over the data axes.  The
-    default ``"replicated"`` is the batch-parallel serving placement (W on
-    every device, lanes sharded); a no-op outside a rules+mesh context.
+    requested layout while the request batch splits over the data axes.
+
+    ``layout=None`` resolves from the active context: the plan's layout
+    under an active :class:`ShardPlan`, else ``"replicated"`` — the
+    batch-parallel serving placement (W on every device, lanes sharded).
+    A no-op outside a rules+mesh context.
     """
     mesh = current_mesh()
     if mesh is None or current_rules() is None:
         return params
     from repro.core.dynamics import OnnParams
 
+    plan = current_plan()
+    if layout is None and plan is None:
+        layout = "replicated"
+    if plan is not None and params.weights.shape[0] % max(plan.model, 1) != 0:
+        # Uneven row sharding is not expressible as a NamedSharding; keep the
+        # at-rest copy replicated — the weighted-sum collective still splits
+        # the *compute* by zero-row padding inside its shard_map.
+        plan = None
+        layout = "replicated"
     multi_pod = "pod" in mesh.axis_names
     return OnnParams(
         weights=jax.lax.with_sharding_constraint(
-            params.weights, NamedSharding(mesh, onn_weight_spec(multi_pod, layout))
+            params.weights,
+            NamedSharding(mesh, onn_weight_spec(multi_pod, layout, plan)),
         ),
         bias=jax.lax.with_sharding_constraint(
             params.bias, NamedSharding(mesh, P(None))
+        ),
+    )
+
+
+def shard_onn_params(params, plan: "ShardPlan", mesh: Mesh):
+    """``device_put`` live ``OnnParams`` into a plan's at-rest placement.
+
+    Row-shards the coupling matrix over the ``"model"`` axis when the plan
+    model-parallelizes and N divides the model degree — per-device weight
+    bytes shrink by 1/model, which is what breaks the single-device N = 506
+    wall.  When N does not divide, the at-rest copy stays replicated (XLA
+    named shardings must be even) and only the compute is sharded.
+    """
+    n = params.weights.shape[0]
+    if plan.model_sharded and n % plan.model == 0:
+        w_spec = P("model", None)
+    else:
+        w_spec = P(None, None)
+    from repro.core.dynamics import OnnParams
+
+    return jax.device_put(
+        params,
+        OnnParams(
+            weights=NamedSharding(mesh, w_spec),
+            bias=NamedSharding(mesh, P(None)),
         ),
     )

@@ -41,7 +41,13 @@ def _fpga_design_tradeoff(
     Labels map to time-to-solution seconds, or None when the design does
     not fit the FPGA budget at this N — the fast-but-small recurrent
     against the slow-but-large hybrid, plus the configured P-wide hybrid
-    when the backend serializes with ``parallel`` > 1.
+    when the backend serializes with ``parallel`` > 1.  Once N exceeds one
+    board's hybrid capacity, each non-fitting hybrid design additionally
+    quotes its cheapest partitioned sibling ``hybrid[K=k,P=p]`` — the
+    coupling rows split over the fewest boards that fit
+    (``hw.min_boards``), paying the per-update inter-board amplitude
+    exchange ``hw.partitioned_time_to_solution`` models.  The hardware twin
+    of the software ``ShardPlan`` model axis.
     """
     designs: Dict[str, Tuple[str, int]] = {
         "recurrent": ("recurrent", 1),
@@ -49,7 +55,7 @@ def _fpga_design_tradeoff(
     }
     if parallel > 1:
         designs[f"hybrid[P={parallel}]"] = ("hybrid", parallel)
-    return {
+    quotes: Dict[str, Optional[float]] = {
         label: (
             hw.time_to_solution(arch, n, cycles, bits, parallel=par)
             if hw.fits(arch, n, bits, parallel=par)
@@ -57,6 +63,15 @@ def _fpga_design_tradeoff(
         )
         for label, (arch, par) in designs.items()
     }
+    for label, (arch, par) in designs.items():
+        if arch != "hybrid" or quotes[label] is not None:
+            continue
+        k = hw.min_boards(n, bits, parallel=par)
+        if k is not None and k > 1:
+            quotes[f"hybrid[K={k},P={par}]"] = hw.partitioned_time_to_solution(
+                n, k, cycles, bits, parallel=par
+            )
+    return quotes
 
 
 # ---------------------------------------------------------------------------

@@ -49,7 +49,10 @@ class Estimate:
     ``"hybrid[P=32]"``) to their hardware time-to-solution in seconds, with
     ``None`` marking designs that do not fit the FPGA budget at this N —
     the fast-but-small recurrent vs slow-but-large hybrid choice, made
-    visible next to every software latency quote.
+    visible next to every software latency quote.  Past one board's hybrid
+    capacity a partitioned multi-FPGA point ``"hybrid[K=4,P=1]"`` (coupling
+    rows over K boards, inter-board amplitude exchange per update) joins
+    the quote — see ``hardware_model.partitioned_time_to_solution``.
     """
 
     seconds: float

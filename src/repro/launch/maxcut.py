@@ -13,8 +13,12 @@ parallelization trade).  Bucket padding is bit-identical on the real
 vertices: the same (instance, seed) returns the same cut under every
 ``--n-policy``.
 
-``--shard-batch`` activates the mesh recipe from ``repro.launch.retrieve``:
-request slabs are split over all local devices (data-parallel instances).
+``--mesh BxM`` activates a :class:`repro.distributed.ShardPlan`: request
+slabs split B ways over the data axis while the coupling field of every
+instance is computed through the M-way row-sharded ``weighted_sum``
+collective (``auto`` asks ``ft.propose_mesh``).  The legacy
+``--shard-batch`` flag still works as a deprecated alias for an all-data
+mesh.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.maxcut --n 128 --requests 32 \
@@ -27,6 +31,7 @@ import argparse
 import contextlib
 import json
 import time
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,9 +39,9 @@ import jax.numpy as jnp
 
 from repro.api import MaxCutSolver
 from repro.core.ising import random_graph
-from repro.distributed import sharding as shard_lib
+from repro.distributed import ShardPlan
 from repro.engine import DEFAULT_BATCH_BUCKETS, Engine, Request
-from repro.launch.retrieve import batch_mesh
+from repro.launch.retrieve import _plan_of_mesh_kwarg, resolve_plan_args
 
 
 def serve_cuts(
@@ -49,18 +54,25 @@ def serve_cuts(
     batch_buckets: Tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
     n_policy: Any = "pow2",
     coalesce: bool = True,
-    mesh: Optional[jax.sharding.Mesh] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,  # deprecated: pass plan=
+    plan: Optional[ShardPlan] = None,
 ) -> Dict[str, Any]:
     """Solve ``n_requests`` random G(n, edge_prob) instances through one engine."""
+    if mesh is not None and plan is None:
+        warnings.warn(
+            "serve_cuts(mesh=...) is deprecated; pass plan=ShardPlan(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    plan = _plan_of_mesh_kwarg(mesh, plan)
     key = jax.random.PRNGKey(seed)
     k_graphs, k_engine = jax.random.split(key)
     graph_keys = jax.random.split(k_graphs, n_requests)
     adjs = [random_graph(k, n, edge_prob) for k in graph_keys]
 
     rules_ctx = (
-        contextlib.nullcontext()
-        if mesh is None
-        else shard_lib.use_rules(shard_lib.single_pod_rules(), mesh)
+        contextlib.nullcontext() if plan is None or plan.devices == 1
+        else plan.context()
     )
     eng = Engine(k_engine, batch_buckets=batch_buckets, n_policy=n_policy, coalesce=coalesce)
     eng.install("maxcut", solver.as_engine_solver())
@@ -104,7 +116,7 @@ def serve_cuts(
             "slabs_per_bucket": stats["slabs_per_bucket"],
             "maxcut": stats["solvers"].get("maxcut", {}),
         },
-        "mesh_devices": 1 if mesh is None else mesh.devices.size,
+        "mesh_devices": 1 if plan is None else plan.devices,
     }
 
 
@@ -134,9 +146,13 @@ def main() -> None:
                     help="largest engine batch bucket")
     ap.add_argument("--no-coalesce", action="store_true",
                     help="serve each request in its own slab (latency-first)")
+    ap.add_argument("--mesh", default=None, metavar="BxM",
+                    help="ShardPlan mesh: B-way data-parallel instances x "
+                         "M-way row-sharded coupling sum (e.g. 2x4), or "
+                         "'auto' (ft.propose_mesh over the local devices)")
     ap.add_argument("--shard-batch", action="store_true",
-                    help="split request slabs over all local devices "
-                         "(data-parallel mesh; no-op on one device)")
+                    help="deprecated: use --mesh Bx1; splits request slabs "
+                         "over all local devices (no-op on one device)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -158,7 +174,7 @@ def main() -> None:
     print(json.dumps(serve_cuts(
         solver, args.n, args.requests, args.edge_prob, args.seed,
         batch_buckets=buckets, n_policy=policy, coalesce=not args.no_coalesce,
-        mesh=batch_mesh() if args.shard_batch else None,
+        plan=resolve_plan_args(args.mesh, args.shard_batch),
     ), indent=1))
 
 

@@ -36,3 +36,20 @@ def mesh_devices(mesh: Mesh) -> int:
     for s in mesh.devices.shape:
         n *= s
     return n
+
+
+def build_shard_plan(spec: str = "auto"):
+    """Build the launcher-facing :class:`repro.distributed.ShardPlan`.
+
+    ``spec``: ``"BxM"`` (data × model degrees) or ``"auto"``
+    (``ft.propose_mesh`` over the local devices).  The single entry point
+    behind every launcher's ``--mesh`` flag.
+    """
+    from repro.distributed import ShardPlan
+
+    return ShardPlan.parse(spec)
+
+
+def make_plan_mesh(plan) -> Mesh:
+    """The local ``(batch, model)`` mesh for a ShardPlan."""
+    return plan.make_mesh()

@@ -14,9 +14,11 @@ the serving executable: any same-bucket solver reuses the first compile.
 
 Bucket solves are one call into the batched-native ``retrieve``: the slab
 advances through one (B,N)×(N,N) contraction per cycle and exits as soon as
-every lane settles (``--settle-chunk`` sets the check granularity), and
-``--shard-batch`` splits each slab over all local devices (replicated
-coupling matrix, data-parallel lanes).
+every lane settles (``--settle-chunk`` sets the check granularity).
+``--mesh BxM`` activates a :class:`repro.distributed.ShardPlan` — B-way
+data-parallel lanes × M-way row-sharded coupling matrix (``auto`` asks
+``ft.propose_mesh``); the legacy ``--shard-batch`` recipe still works as a
+deprecated alias for an all-data mesh.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.retrieve --dataset 10x10 \
@@ -39,6 +41,7 @@ import numpy as np
 
 from repro.api import RetrievalSolver
 from repro.data import patterns as pat
+from repro.distributed import ShardPlan, plan_of_legacy_shard_batch
 from repro.distributed import sharding as shard_lib
 from repro.engine import DEFAULT_BATCH_BUCKETS, Engine, Request
 
@@ -73,15 +76,13 @@ def build_solver(
 
 
 def batch_mesh() -> Optional[jax.sharding.Mesh]:
-    """A ("data", "model") mesh over all local devices, data-major.
+    """Deprecated: a ("data", "model") mesh over all local devices, data-major.
 
-    The sharded-retrieve recipe: activate this mesh with
-    ``sharding.use_rules(single_pod_rules(), mesh)`` and replicate the
-    coupling matrix (``onn_param_shardings(mesh, layout="replicated")``);
-    the batched solve then splits each request slab over the data axis —
-    the software analogue of the paper's deferred multi-FPGA clustering,
-    with the batch rather than the matrix as the scaling axis.  Returns
-    None when there is a single device (nothing to shard).
+    The old per-launcher sharded-retrieve recipe (lanes over every device,
+    coupling matrix replicated).  Superseded by
+    ``repro.distributed.ShardPlan`` — ``plan_of_legacy_shard_batch()`` is
+    the equivalent plan, and ``--mesh BxM`` composes data- and
+    model-parallelism.  Returns None on a single device.
     """
     devices = jax.devices()
     if len(devices) < 2:
@@ -91,15 +92,55 @@ def batch_mesh() -> Optional[jax.sharding.Mesh]:
     )
 
 
-def _sharded_context(solver: RetrievalSolver, mesh: Optional[jax.sharding.Mesh]):
-    """(possibly resharded solver, active rules context) for serving."""
-    if mesh is None:
+def plan_context(solver, plan: Optional[ShardPlan]):
+    """(resharded solver, active plan context) for serving under a plan.
+
+    Places the coupling matrix for the plan's layout (row-sharded over the
+    ``"model"`` axis when it model-parallelizes and N divides) and returns
+    the context manager that activates the plan for every solve traced
+    inside.  ``plan=None`` (or a trivial 1×1 plan) is a no-op.
+    """
+    if plan is None or plan.devices == 1:
         return solver, contextlib.nullcontext()
-    params = jax.device_put(
-        solver.params, shard_lib.onn_param_shardings(mesh, layout="replicated")
-    )
+    mesh = plan.make_mesh()
+    params = shard_lib.shard_onn_params(solver.params, plan, mesh)
     solver = dataclasses.replace(solver, params=params)
-    return solver, shard_lib.use_rules(shard_lib.single_pod_rules(), mesh)
+    return solver, plan.context(mesh)
+
+
+def _plan_of_mesh_kwarg(
+    mesh: Optional[jax.sharding.Mesh], plan: Optional[ShardPlan]
+) -> Optional[ShardPlan]:
+    """Fold the deprecated ``mesh=`` kwarg into a ShardPlan (legacy recipe)."""
+    if plan is not None:
+        return plan
+    if mesh is None:
+        return None
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardPlan(
+        batch=shape.get("data", 1), model=shape.get("model", 1),
+        layout="replicated",
+    )
+
+
+def resolve_plan_args(
+    mesh_spec: Optional[str], shard_batch: bool
+) -> Optional[ShardPlan]:
+    """The ShardPlan implied by the ``--mesh`` / legacy ``--shard-batch`` flags."""
+    if mesh_spec is not None and shard_batch:
+        raise SystemExit("--mesh and --shard-batch are mutually exclusive")
+    if mesh_spec is not None:
+        return ShardPlan.parse(mesh_spec)
+    if shard_batch:
+        warnings.warn(
+            "--shard-batch is deprecated; use --mesh Bx1 (or --mesh auto)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if jax.device_count() < 2:
+            return None
+        return plan_of_legacy_shard_batch()
+    return None
 
 
 def serve_requests(
@@ -112,8 +153,16 @@ def serve_requests(
     batch_buckets: Tuple[int, ...] = DEFAULT_BATCH_BUCKETS,
     n_policy: Any = "pow2",
     coalesce: bool = True,
-    mesh: Optional[jax.sharding.Mesh] = None,
+    mesh: Optional[jax.sharding.Mesh] = None,  # deprecated: pass plan=
+    plan: Optional[ShardPlan] = None,
 ) -> Dict[str, Any]:
+    if mesh is not None and plan is None:
+        warnings.warn(
+            "serve_requests(mesh=...) is deprecated; pass plan=ShardPlan(...)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    plan = _plan_of_mesh_kwarg(mesh, plan)
     p, n = xi.shape
     key = jax.random.PRNGKey(seed)
     k1, k2, k_engine = jax.random.split(key, 3)
@@ -122,7 +171,7 @@ def serve_requests(
     ckeys = jax.random.split(k2, n_requests)
     corrupted = jax.vmap(lambda t, k: pat.corrupt(t, k, corruption))(targets, ckeys)
 
-    solver, rules_ctx = _sharded_context(solver, mesh)
+    solver, rules_ctx = plan_context(solver, plan)
     eng = Engine(
         k_engine, batch_buckets=batch_buckets, n_policy=n_policy, coalesce=coalesce
     )
@@ -163,7 +212,8 @@ def serve_requests(
             # and tighten toward the early-exit EMA as slabs are served.
             "retrieval": stats["solvers"].get("retrieval", {}),
         },
-        "mesh_devices": 1 if mesh is None else mesh.devices.size,
+        "mesh_devices": 1 if plan is None else plan.devices,
+        "shard_plan": None if plan is None else dataclasses.asdict(plan),
     }
 
 
@@ -183,13 +233,15 @@ def main() -> None:
     ap.add_argument("--hybrid-impl", default="scan", choices=["scan", "pallas"],
                     help="execution route of --backend hybrid: lax.scan "
                          "reference or blocked pass-group Pallas kernels")
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="deprecated alias for --backend pallas")
     ap.add_argument("--settle-chunk", type=int, default=8,
                     help="cycles between early-exit checks (0 = fixed scan)")
+    ap.add_argument("--mesh", default=None, metavar="BxM",
+                    help="ShardPlan mesh: B-way data-parallel lanes x M-way "
+                         "row-sharded coupling matrix (e.g. 2x4), or 'auto' "
+                         "(ft.propose_mesh over the local devices)")
     ap.add_argument("--shard-batch", action="store_true",
-                    help="split request slabs over all local devices "
-                         "(data-parallel mesh; no-op on one device)")
+                    help="deprecated: use --mesh Bx1; splits request slabs "
+                         "over all local devices (no-op on one device)")
     ap.add_argument("--n-policy", default="pow2",
                     help='engine N bucketing: "pow2", "exact", or comma sizes')
     ap.add_argument("--max-batch", type=int, default=max(DEFAULT_BATCH_BUCKETS),
@@ -198,16 +250,8 @@ def main() -> None:
                     help="serve each request in its own slab (latency-first)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    backend = args.backend
-    if args.use_kernel:
-        warnings.warn(
-            "--use-kernel is deprecated; pass --backend pallas",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        backend = "pallas"
     solver, xi = build_solver(
-        args.dataset, args.architecture, args.mode, backend=backend,
+        args.dataset, args.architecture, args.mode, backend=args.backend,
         settle_chunk=args.settle_chunk, parallel_factor=args.parallel_factor,
         hybrid_impl=args.hybrid_impl,
     )
@@ -218,7 +262,7 @@ def main() -> None:
     print(json.dumps(serve_requests(
         solver, xi, args.corruption, args.requests, args.seed,
         batch_buckets=buckets, n_policy=policy, coalesce=not args.no_coalesce,
-        mesh=batch_mesh() if args.shard_batch else None,
+        plan=resolve_plan_args(args.mesh, args.shard_batch),
     ), indent=1))
 
 

@@ -10,6 +10,14 @@ Send SIGTERM to observe the graceful drain: in-flight slabs complete,
 queued requests are rejected (or served with ``--drain-queue``), the
 heartbeat file goes stale after exit.
 
+``--mesh BxM`` runs the whole daemon under a
+:class:`repro.distributed.ShardPlan`: streaming slabs split B ways over the
+data axis and every coupling sum runs the M-way row-sharded collective.
+``--mesh auto`` sizes the plan with ``repro.distributed.ft.propose_mesh`` —
+the same elastic re-mesh policy the daemon's fault-tolerance hooks
+(heartbeat, preemption guard, per-slab step monitors) assume after a device
+loss, so a restarted daemon on fewer devices picks a consistent plan.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_daemon --rate 20 --requests 200
   PYTHONPATH=src python -m repro.launch.serve_daemon --ticked 4  # no wall clock
@@ -18,12 +26,14 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 from typing import Dict, Optional, Tuple
 
 import jax
 
 from repro import serving
+from repro.distributed import ShardPlan
 
 
 def parse_weights(spec: str) -> Tuple[Tuple[str, float], ...]:
@@ -51,6 +61,7 @@ def run_daemon(
     ticked: int = 0,
     max_ticks: Optional[int] = None,
     onn_ckpt: Optional[str] = None,
+    plan: Optional[ShardPlan] = None,
 ) -> Dict:
     eng = serving.ContinuousEngine(
         jax.random.PRNGKey(seed),
@@ -72,7 +83,18 @@ def run_daemon(
         drain_queue_on_term=drain_queue_on_term,
         max_ticks=max_ticks,
     )
-    return daemon.run(source)
+    plan_ctx = (
+        contextlib.nullcontext() if plan is None or plan.devices == 1
+        else plan.context()
+    )
+    with plan_ctx:
+        report = daemon.run(source)
+    if plan is not None:
+        report["shard_plan"] = {
+            "batch": plan.batch, "model": plan.model,
+            "layout": plan.layout, "compressed": plan.compressed,
+        }
+    return report
 
 
 def main() -> None:
@@ -97,7 +119,17 @@ def main() -> None:
     ap.add_argument("--onn-ckpt", default=None,
                     help="restore the small retrieval workload from this ONN "
                          "checkpoint (written by repro.launch.train_onn)")
+    ap.add_argument("--mesh", default=None, metavar="BxM",
+                    help="ShardPlan mesh for the daemon: B-way data-parallel "
+                         "slabs x M-way row-sharded coupling sums, or 'auto' "
+                         "(ft.propose_mesh over the local devices)")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="deprecated: use --mesh Bx1; splits streaming slabs "
+                         "over all local devices")
     args = ap.parse_args()
+    from repro.launch.retrieve import resolve_plan_args
+
+    plan = resolve_plan_args(args.mesh, args.shard_batch)
     report = run_daemon(
         rate_rps=args.rate,
         n_requests=args.requests,
@@ -111,6 +143,7 @@ def main() -> None:
         ticked=args.ticked,
         max_ticks=args.max_ticks,
         onn_ckpt=args.onn_ckpt,
+        plan=plan,
     )
     print(json.dumps(report, indent=1, default=str))
 

@@ -18,6 +18,8 @@ Pieces:
 * ``ErrorFeedback`` — the residual buffer (init/apply), optimizer-state-like.
 * ``compressed_psum_mean`` — the shard_map collective kernel.
 * ``compressed_grads`` — shard_map wrapper: local grads → synced grads.
+* ``compressed_psum_scatter`` — the inference sibling: disjoint row-block
+  partials of the model-parallel ``weighted_sum`` combined on an int8 wire.
 """
 
 from __future__ import annotations
@@ -74,6 +76,52 @@ def compressed_psum_mean(x: jax.Array, err: jax.Array, axis_name: str):
     total = jax.lax.psum(q_shared.astype(jnp.int32), axis_name)
     mean = total.astype(jnp.float32) * scale_max / n
     return mean, new_err
+
+
+def compressed_psum_scatter(
+    part: jax.Array, index: jax.Array, blocks: int, axis_name: str
+) -> jax.Array:
+    """Combine disjoint row-block partials over ``axis_name`` on an int8 wire.
+
+    The inference-side sibling of :func:`compressed_psum_mean`, built for the
+    model-parallel ``weighted_sum`` collective
+    (``repro.core.dynamics._model_sharded_sum``): device ``index`` of
+    ``blocks`` holds the int32 partial fields ``part`` (..., blk) of its own
+    coupling-matrix row block, and the blocks are disjoint — the psum is
+    really an all-gather, so per-element there is exactly ONE contributor.
+    Each device quantizes its partial with a scalar scale
+    ``max(absmax / 127, 1)``, scatters the int8 payload and a per-row scale
+    vector into the full width, and psums both; dequantization multiplies
+    each row by the scale of the device that produced it.
+
+    Exactness: the scale floors at 1, so whenever every local field fits
+    int8 (|S| ≤ 127 — e.g. low weight_bits or small N) the round trip is the
+    identity and the solve stays bit-exact with the int32 combine.  Beyond
+    that it is a documented approximation (the phase dynamics consume
+    ``sign(S)``, so only near-zero fields can flip) — which is why the
+    compressed wire is opt-in (``ShardPlan(compressed=True)``).
+
+    No error feedback here: an inference collective has no iteration-coupled
+    state to carry a residual through (unlike the gradient stream), and a
+    stale residual would break the bit-exact small-field guarantee.
+    Returns the combined int32 fields, shape (..., blk · blocks).
+    """
+    blk = part.shape[-1]
+    total = blk * blocks
+    absmax = jnp.max(jnp.abs(part)).astype(jnp.float32)
+    scale = jnp.maximum(absmax / 127.0, jnp.float32(1.0))
+    q = jnp.clip(jnp.round(part / scale), -127, 127).astype(jnp.int8)
+    qbuf = jnp.zeros(part.shape[:-1] + (total,), jnp.int32)
+    qbuf = jax.lax.dynamic_update_slice_in_dim(
+        qbuf, q.astype(jnp.int32), index * blk, axis=-1
+    )
+    svec = jnp.zeros((total,), jnp.float32)
+    svec = jax.lax.dynamic_update_slice_in_dim(
+        svec, jnp.full((blk,), scale, jnp.float32), index * blk, axis=0
+    )
+    q_sum = jax.lax.psum(qbuf, axis_name)
+    s_sum = jax.lax.psum(svec, axis_name)
+    return jnp.round(q_sum.astype(jnp.float32) * s_sum).astype(jnp.int32)
 
 
 def compressed_grads(

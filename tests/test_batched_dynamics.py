@@ -297,18 +297,21 @@ def test_sharding_context_gets_its_own_executable():
 # ---------------------------------------------------------------------------
 
 
-def test_use_kernel_flag_warns_and_normalizes():
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        cfg = dynamics.ONNConfig(n=4, use_kernel=True)
-    assert cfg.backend == "pallas" and cfg.use_kernel is False
+def test_use_kernel_flag_removed():
+    """The deprecated use_kernel alias is gone: passing it is an error, not
+    a silent no-op (dataclasses reject unknown keywords with TypeError)."""
+    with pytest.raises(TypeError, match="use_kernel"):
+        dynamics.ONNConfig(n=4, use_kernel=True)
 
 
-def test_onn_class_shim_warns():
-    from repro.core.onn import ONN
+def test_onn_class_shim_removed():
+    """The legacy class wrapper (deprecated since PR 1) no longer imports,
+    and the core facade no longer re-exports it."""
+    import repro.core as core
 
-    w, _, _ = _instance(1, 4)
-    with pytest.warns(DeprecationWarning, match="functional API"):
-        ONN(dynamics.ONNConfig(n=4), w)
+    with pytest.raises(ModuleNotFoundError):
+        import repro.core.onn  # noqa: F401
+    assert not hasattr(core, "ONN")
 
 
 # ---------------------------------------------------------------------------

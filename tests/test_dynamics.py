@@ -114,29 +114,26 @@ def test_backends_bit_exact(n, chunk):
 def test_legacy_route_flags_map_to_backend():
     assert api.ONNConfig(n=4).backend == "parallel"
     assert api.ONNConfig(n=4, serial_chunk=2).backend == "serial"
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        assert api.ONNConfig(n=4, use_kernel=True).backend == "pallas"
+    assert api.ONNConfig(n=4, parallel_factor=8).backend == "hybrid"
     with pytest.raises(ValueError):
         api.ONNConfig(n=4, backend="systolic")
     # contradictory combinations raise instead of silently dropping a flag
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        with pytest.raises(ValueError, match="use_kernel"):
-            api.ONNConfig(n=4, backend="serial", use_kernel=True)
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        with pytest.raises(ValueError, match="use_kernel"):
-            api.ONNConfig(n=4, use_kernel=True, serial_chunk=2)
+    with pytest.raises(ValueError, match="contradictory"):
+        api.ONNConfig(n=4, serial_chunk=2, parallel_factor=8)
+    # the use_kernel alias (deprecated since PR 1) is gone for good
+    with pytest.raises(TypeError, match="use_kernel"):
+        api.ONNConfig(n=4, use_kernel=True)
 
 
 def test_legacy_and_canonical_spellings_share_a_cache_key():
     """Old-style and new-style configs of the same schedule must hash equal,
     or jit(static_argnums=0) would compile the same program twice.  The
-    old-style spelling is deprecated and says so."""
-    with pytest.warns(DeprecationWarning, match="use_kernel"):
-        legacy = api.ONNConfig(n=4, use_kernel=True)
-    assert legacy == api.ONNConfig(n=4, backend="pallas")
-    assert hash(legacy) == hash(api.ONNConfig(n=4, backend="pallas"))
+    old-style spelling normalizes in __post_init__."""
     assert api.ONNConfig(n=4, serial_chunk=2) == api.ONNConfig(
         n=4, backend="serial", serial_chunk=2
+    )
+    assert hash(api.ONNConfig(n=4, parallel_factor=8)) == hash(
+        api.ONNConfig(n=4, backend="hybrid", parallel_factor=8)
     )
 
 

@@ -312,3 +312,24 @@ def test_stats_and_estimates():
     assert stats["completed"] == 1 and not stats["pending"]
     warm = eng.estimate("letters", _patterns(24, 2, 16))
     assert warm.source == "ema"  # measured by the drained slab
+
+
+def test_fpga_tradeoff_quotes_partitioned_design_past_the_wall():
+    from repro.core import hardware_model as hw
+    from repro.engine.adapters import _fpga_design_tradeoff
+
+    bits = hw.BitConfig()
+    # At the paper's capacity point the single board still fits: no K key.
+    at_wall = _fpga_design_tradeoff(506, 100.0, bits, 1)
+    assert at_wall["hybrid[P=1]"] is not None
+    assert not any(k.startswith("hybrid[K=") for k in at_wall)
+    # Past it, the non-fitting hybrid quotes its cheapest partitioned
+    # sibling: rows over the fewest power-of-two boards that fit.
+    past = _fpga_design_tradeoff(4096, 100.0, bits, 1)
+    assert past["hybrid[P=1]"] is None
+    k = hw.min_boards(4096, bits)
+    quoted = past[f"hybrid[K={k},P=1]"]
+    assert quoted is not None and quoted > 0
+    assert quoted == pytest.approx(
+        hw.partitioned_time_to_solution(4096, k, 100.0, bits)
+    )

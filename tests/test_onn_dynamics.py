@@ -139,14 +139,8 @@ def test_max_cycles_bound_and_settle_units():
     assert np.all(np.asarray(out.settle_cycle) <= 7)
 
 
-def test_deprecated_onn_class_delegates():
-    """The legacy ONN wrapper warns and reproduces the functional result."""
-    from repro.core.onn import ONN
-
-    cfg, params, xi, w = _trained("5x4", mode="functional")
-    with pytest.warns(DeprecationWarning):
-        onn = ONN(cfg, w)
-    corrupted = corrupt_batch(xi[2], jax.random.PRNGKey(5), 0.25, 8)
-    ref = api.retrieve(cfg, params, corrupted)
-    out = onn.retrieve(corrupted)
-    np.testing.assert_array_equal(np.asarray(ref.final_sigma), np.asarray(out.final_sigma))
+def test_deprecated_onn_class_removed():
+    """The legacy ONN wrapper (deprecated since PR 1) is gone; the
+    functional API is the single entry point."""
+    with pytest.raises(ModuleNotFoundError):
+        from repro.core.onn import ONN  # noqa: F401
