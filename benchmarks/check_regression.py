@@ -22,6 +22,11 @@ runner is not a regression and a faster one cannot mask a real one.
   PYTHONPATH=src python -m benchmarks.check_regression              # run + gate
   PYTHONPATH=src python -m benchmarks.check_regression --update     # refresh baselines
   PYTHONPATH=src python -m benchmarks.check_regression --fresh-dir out/  # pre-run files
+
+Exit codes: 0 gate passed; 1 a gated metric regressed; 2 usage error;
+3 a committed baseline is missing or unparsable (the gate could not run —
+regenerate with ``--update`` and commit the file, don't chase a phantom
+regression).
 """
 
 from __future__ import annotations
@@ -73,11 +78,22 @@ def _run_fresh(name: str, out_path: str) -> None:
     mod.main(smoke=True, out=out_path)
 
 
+#: Exit statuses (documented in the module docstring).
+EXIT_OK, EXIT_REGRESSION, EXIT_USAGE, EXIT_BASELINE = 0, 1, 2, 3
+
+
+class BaselineError(Exception):
+    """A benchmark JSON exists but cannot be parsed."""
+
+
 def _load(path: str) -> Optional[Dict[str, Any]]:
     if not os.path.exists(path):
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as exc:
+        raise BaselineError(f"{path} is not valid JSON ({exc})") from exc
 
 
 #: Metrics whose baseline wall clock is below this are reported but not
@@ -162,7 +178,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     unknown = set(benches) - set(BENCH_METRICS)
     if unknown:
         print(f"unknown benchmarks: {sorted(unknown)}", file=sys.stderr)
-        return 2
+        return EXIT_USAGE
 
     tmp_dir = None
     fresh_dir = args.fresh_dir
@@ -171,6 +187,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         fresh_dir = tmp_dir
 
     failed = False
+    baseline_broken = False
     try:
         for name in benches:
             fname = BASELINE_FILES[name]
@@ -178,7 +195,12 @@ def main(argv: Optional[List[str]] = None) -> int:
             if not os.path.exists(fresh_path):
                 print(f"\n===== {name}: fresh smoke run =====", flush=True)
                 _run_fresh(name, fresh_path)
-            fresh = _load(fresh_path)
+            try:
+                fresh = _load(fresh_path)
+            except BaselineError as exc:
+                print(f"{name}: fresh run output unreadable: {exc}", file=sys.stderr)
+                failed = True
+                continue
             if fresh is None:
                 print(f"{name}: fresh run produced no {fname}", file=sys.stderr)
                 failed = True
@@ -188,15 +210,27 @@ def main(argv: Optional[List[str]] = None) -> int:
                 shutil.copyfile(fresh_path, baseline_path)
                 print(f"{name}: baseline {baseline_path} updated")
                 continue
-            baseline = _load(baseline_path)
-            if baseline is None:
+            try:
+                baseline = _load(baseline_path)
+            except BaselineError as exc:
                 print(
-                    f"{name}: no committed baseline at {baseline_path}; run "
-                    "`python -m benchmarks.check_regression --update` and "
-                    "commit the result",
+                    f"{name}: committed baseline unreadable: {exc}. The gate "
+                    "cannot run against it — regenerate with `python -m "
+                    f"benchmarks.check_regression --update --benches {name}` "
+                    f"and commit {fname}.",
                     file=sys.stderr,
                 )
-                failed = True
+                baseline_broken = True
+                continue
+            if baseline is None:
+                print(
+                    f"{name}: no committed baseline at {baseline_path}. "
+                    "Generate one with `python -m benchmarks.check_regression "
+                    f"--update --benches {name}` and commit {fname}; until "
+                    "then this benchmark is ungated.",
+                    file=sys.stderr,
+                )
+                baseline_broken = True
                 continue
             base_metrics = _metrics(name, baseline)
             fresh_metrics = _metrics(name, fresh)
@@ -217,7 +251,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     tempfile.mkdtemp(prefix="bench_retry_"), fname
                 )
                 _run_fresh(name, retry_path)
-                retry = _load(retry_path)
+                try:
+                    retry = _load(retry_path)
+                except BaselineError:
+                    retry = None
                 shutil.rmtree(os.path.dirname(retry_path), ignore_errors=True)
                 if retry is None:
                     break
@@ -241,14 +278,22 @@ def main(argv: Optional[List[str]] = None) -> int:
         if tmp_dir is not None:
             shutil.rmtree(tmp_dir, ignore_errors=True)
 
+    if baseline_broken:
+        print(
+            "\nbench-regression gate could not run: missing or unparsable "
+            "committed baseline(s) — see messages above for the exact "
+            "--update command to fix each one.",
+            file=sys.stderr,
+        )
+        return EXIT_BASELINE
     if failed:
         print(
             f"\nbench-regression gate FAILED (threshold {args.threshold:.0%})",
             file=sys.stderr,
         )
-        return 1
+        return EXIT_REGRESSION
     print(f"\nbench-regression gate passed (threshold {args.threshold:.0%})")
-    return 0
+    return EXIT_OK
 
 
 if __name__ == "__main__":

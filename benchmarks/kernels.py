@@ -54,26 +54,41 @@ def correctness_sweep() -> List[Dict]:
 
 
 def vmem_accounting() -> List[Dict]:
-    """Working set of the *autotuned* tiles per bucket (not gated)."""
+    """Worst working set per (kind, N) over the shared bucket grid (not gated).
+
+    Sweeps the same ``autotune.iter_buckets()`` grid as the static checker
+    (``repro.analysis.vmem``) — the benchmarks and the CI gate can no longer
+    disagree about which buckets exist — keeping the worst batch bucket per
+    (kind, N) so the JSON stays readable.
+    """
+    from repro.analysis import vmem as vmem_check
+
+    worst: Dict[tuple, vmem_check.BucketReport] = {}
+    for rep in vmem_check.check_all():
+        cur = worst.get((rep.kind, rep.n))
+        if cur is None or rep.bytes > cur.bytes:
+            worst[(rep.kind, rep.n)] = rep
     rows = []
-    for n, b in ((48, 16), (128, 128), (506, 32), (1024, 128)):
-        blk = autotune.blocks_for("step", n=n, batch=b)
-        vb = ck.vmem_bytes(blk.block_b, blk.block_i, blk.block_k, fused=True)
-        # fused step: int8 dot (2·bb·bi·bk int-MACs) over (σ + W tiles) bytes
-        flops = 2 * blk.block_b * blk.block_i * blk.block_k
-        tile_bytes = blk.block_b * blk.block_k + blk.block_i * blk.block_k
+    for rep in worst.values():
+        bb, bi, bk = rep.blocks
         rows.append(
             {
                 "kernel": "vmem",
-                "n": n,
-                "batch": b,
-                "block": f"{blk.block_b}x{blk.block_i}x{blk.block_k}",
-                "vmem_bytes": vb,
-                "fits_16MiB": vb <= 16 * 2**20,
-                "arith_intensity": round(flops / tile_bytes, 1),
+                "kind": rep.kind,
+                "n": rep.n,
+                "batch": rep.batch,
+                "block": f"{bb}x{bi}x{bk}",
+                "worst_kernel": rep.kernel,
+                "vmem_bytes": rep.bytes,
+                "budget_bytes": rep.budget,
+                "fits_budget": rep.ok,
             }
         )
-        assert vb <= autotune.VMEM_BUDGET_BYTES, f"tuned blocks bust budget at n={n}"
+        if not rep.ok:
+            raise AssertionError(
+                f"tuned blocks bust budget: {rep.kind} n={rep.n} batch={rep.batch} "
+                f"({rep.bytes:,d} > {rep.budget:,d} B)"
+            )
     return rows
 
 
@@ -168,11 +183,11 @@ def main(smoke: bool = False, out: Optional[str] = None) -> List[Dict]:
         print(f"# kernel allclose sweep: {ok}/{len(crows)} exact")
 
         vrows = vmem_accounting()
-        print("n,batch,block,vmem_bytes,fits_16MiB,arith_intensity(int-ops/byte)")
+        print("kind,n,batch,block,worst_kernel,vmem_bytes,budget_bytes,fits_budget")
         for r in vrows:
             print(
-                f"{r['n']},{r['batch']},{r['block']},{r['vmem_bytes']},"
-                f"{r['fits_16MiB']},{r['arith_intensity']}"
+                f"{r['kind']},{r['n']},{r['batch']},{r['block']},{r['worst_kernel']},"
+                f"{r['vmem_bytes']},{r['budget_bytes']},{r['fits_budget']}"
             )
 
         before = cal.sample()

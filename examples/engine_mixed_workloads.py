@@ -20,8 +20,8 @@ from repro.core.ising import random_graph
 from repro.data import patterns as pat
 
 
-def main():
-    eng = engine.Engine(jax.random.PRNGKey(0), batch_buckets=(1, 2, 4, 8))
+def main(seed: int = 0):
+    eng = engine.Engine(jax.random.PRNGKey(seed), batch_buckets=(1, 2, 4, 8))
 
     # Workload 1: pattern retrieval on the 10×10 letter set (N=100 → bucket 128).
     xi = pat.load_dataset("10x10")
@@ -35,7 +35,7 @@ def main():
     print(f"retrieval quote: {est.seconds:.4f}s software "
           f"({est.source}); paper hybrid FPGA ≈ {est.fpga_seconds:.4f}s")
 
-    key = jax.random.PRNGKey(1)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 1)
     futures = {}
     for i in range(6):  # interleave the two workloads
         key, k = jax.random.split(key)

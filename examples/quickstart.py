@@ -31,7 +31,7 @@ def show(sigma, rows, cols, title):
         print("  " + "".join("█" if v > 0 else "·" for v in grid[r]))
 
 
-def main():
+def main(seed: int = 42):
     dataset = "10x10"
     rows, cols = pat.DATASET_SHAPES[dataset]
     xi = pat.load_dataset(dataset)
@@ -44,7 +44,7 @@ def main():
     cfg = api.ONNConfig(n=xi.shape[1], architecture="hybrid", mode="functional")
     params = api.make_params(cfg, qw.values)
 
-    key = jax.random.PRNGKey(42)
+    key = jax.random.PRNGKey(seed)
     target = xi[0]
     corrupted = pat.corrupt(target, key, 0.25)
     result = api.run(cfg, params, api.initial_phase(cfg, corrupted))

@@ -28,9 +28,9 @@ import jax
 from repro import serving
 
 
-def main():
+def main(seed: int = 0):
     eng = serving.ContinuousEngine(
-        jax.random.PRNGKey(0),
+        jax.random.PRNGKey(seed),
         slab_lanes=8,
         tenant_weights={"alpha": 2.0, "beta": 1.0},  # alpha gets 2x the lanes
         max_queue_lanes=256,  # admission control: beyond this, submit() rejects

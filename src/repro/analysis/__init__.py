@@ -1,0 +1,29 @@
+"""Repo-aware static analysis: the bug classes this codebase has actually hit.
+
+Every PR since the seed fixed at least one instance of the same few JAX
+hazards by hand — hidden ``PRNGKey(0)`` reuse, an unbounded ``lru_cache``
+over a jitted solver, ``dataclass(eq=True)`` holding jax arrays, per-call
+retraces, ``assert`` inside kernels.  ``ruff`` cannot see any of these; the
+AST rules in :mod:`repro.analysis.rules` can, because they know this repo's
+conventions (``*_cache_key`` functions, ``current_*`` ambient readers, the
+``kernels/`` no-assert contract).
+
+Three layers, by cost:
+
+* ``repro-lint`` / ``python -m repro.analysis`` — pure-AST lint, no jax
+  import, runs in the ruff CI job (:mod:`repro.analysis.core`,
+  :mod:`repro.analysis.rules`).
+* ``python -m repro.analysis --vmem`` — static Pallas VMEM check: walks the
+  kernel BlockSpecs symbolically over every autotune bucket
+  (:mod:`repro.analysis.vmem`).
+* ``python -m repro.analysis.tracegate`` — compile-budget gate: runs a
+  pinned workload matrix and diffs the observed ``TRACE_COUNTER`` /
+  ``TUNE_COUNTER`` deltas against the committed ``TRACE_BUDGET.json``
+  (:mod:`repro.analysis.tracegate`).
+
+Only the first layer is imported here; the jax-dependent layers load
+lazily so the lint path works on a jax-free interpreter.
+"""
+
+from repro.analysis.core import Finding, lint_paths, main  # noqa: F401
+from repro.analysis.rules import RULES  # noqa: F401

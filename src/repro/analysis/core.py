@@ -1,0 +1,250 @@
+"""Lint driver: file discovery, pragma handling, rule dispatch, reporting.
+
+Deliberately stdlib-only (``ast`` + ``re``): the lint CI job installs ruff
+and nothing else, so ``repro-lint`` must run without jax importable.
+
+Escape hatch
+------------
+A finding is suppressed by a pragma comment on the flagged line or the line
+directly above it::
+
+    key = jax.random.PRNGKey(0)  # repro-lint: disable=RPL001
+
+``# repro-lint: disable-file=RPL001`` anywhere in the file suppresses the
+rule for the whole file.  Suppressions are per-code; ``disable=all`` is
+intentionally not supported — name the rule you are overriding.
+
+Fixture convention
+------------------
+Directories named ``fixtures`` are skipped when walking a directory tree
+(they hold deliberately-bad rule fixtures for ``tests/test_analysis.py``)
+but are linted when such a path is passed explicitly.  A ``fixtures`` path
+component also cancels the tests/benchmarks exemption some rules apply, so
+a fixture under ``tests/fixtures/`` still trips path-exempted rules.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+#: ``# repro-lint: disable=RPL001,RPL002`` / ``disable-file=RPL001``.
+_PRAGMA_RE = re.compile(
+    r"#\s*repro-lint\s*:\s*(disable(?:-file)?)\s*=\s*([A-Z]{3}\d{3}(?:\s*,\s*[A-Z]{3}\d{3})*)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class FileContext:
+    """One parsed source file plus the path facts the rules key on."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        self.source = source
+        self.tree = tree
+        parts = [p for p in re.split(r"[\\/]", path) if p not in ("", ".")]
+        self.parts = parts
+        name = parts[-1] if parts else path
+        self.is_fixture = "fixtures" in parts
+        #: tests/benchmarks get a pass on rules about *production* hygiene
+        #: (pinned seeds are the point of a test) — unless the file is a
+        #: lint fixture, which must trip its rule wherever it lives.
+        self.is_test_path = not self.is_fixture and (
+            "tests" in parts
+            or "benchmarks" in parts
+            or name.startswith("test_")
+            or name == "conftest.py"
+        )
+        #: kernels/ carries the no-assert contract (asserts vanish under
+        #: ``python -O`` and fail at trace time on traced operands).
+        self.in_kernels = "kernels" in parts
+        self.defined_functions: Set[str] = {
+            node.name
+            for node in ast.walk(tree)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        self._file_disabled: Set[str] = set()
+        self._line_disabled: Dict[int, Set[str]] = {}
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = _PRAGMA_RE.search(text)
+            if not m:
+                continue
+            codes = {c.strip() for c in m.group(2).split(",")}
+            if m.group(1) == "disable-file":
+                self._file_disabled |= codes
+            else:
+                self._line_disabled.setdefault(lineno, set()).update(codes)
+
+    def suppressed(self, finding: Finding) -> bool:
+        if finding.code in self._file_disabled:
+            return True
+        for lineno in (finding.line, finding.line - 1):
+            if finding.code in self._line_disabled.get(lineno, set()):
+                return True
+        return False
+
+
+class Project:
+    """Cross-file facts gathered in a prescan pass before the rules run."""
+
+    def __init__(self, contexts: Sequence[FileContext]):
+        from repro.analysis import rules as _rules
+
+        self.contexts = list(contexts)
+        #: ``current_*`` ambient readers referenced by any ``*_cache_key``
+        #: function anywhere in the linted tree (RPL008's ground truth).
+        self.cache_key_reads: Set[str] = set()
+        self.has_cache_key_fn = False
+        for ctx in self.contexts:
+            for fn in ast.walk(ctx.tree):
+                if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if not fn.name.endswith("_cache_key") and fn.name != "cache_key":
+                    continue
+                self.has_cache_key_fn = True
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call):
+                        tail = _rules.qual_tail(node.func)
+                        if tail and tail.startswith("current_"):
+                            self.cache_key_reads.add(tail)
+
+
+def iter_python_files(paths: Iterable[str]) -> List[str]:
+    """Expand files/directories into a sorted, deduplicated .py file list.
+
+    Directory walks skip hidden dirs, ``__pycache__``, and ``fixtures``
+    dirs; explicitly named paths are always included (that is how the test
+    suite lints one fixture at a time).
+    """
+    out: List[str] = []
+    seen: Set[str] = set()
+
+    def add(p: str) -> None:
+        key = os.path.normpath(p)
+        if key not in seen:
+            seen.add(key)
+            out.append(key)
+
+    for path in paths:
+        if os.path.isfile(path):
+            add(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(
+                d
+                for d in dirs
+                if not d.startswith(".") and d not in ("__pycache__", "fixtures")
+            )
+            for fname in sorted(files):
+                if fname.endswith(".py"):
+                    add(os.path.join(root, fname))
+    return out
+
+
+def lint_paths(
+    paths: Iterable[str], select: Optional[Iterable[str]] = None
+) -> Tuple[List[Finding], List[str]]:
+    """Run the rule set over ``paths``; returns (findings, file errors)."""
+    from repro.analysis.rules import RULES
+
+    codes = sorted(RULES) if select is None else sorted(set(select))
+    unknown = set(codes) - set(RULES)
+    if unknown:
+        raise ValueError(f"unknown rule codes: {sorted(unknown)}; known: {sorted(RULES)}")
+
+    contexts: List[FileContext] = []
+    errors: List[str] = []
+    for path in iter_python_files(paths):
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            tree = ast.parse(source, filename=path)
+        except (OSError, SyntaxError, ValueError) as exc:
+            errors.append(f"{path}: {exc}")
+            continue
+        contexts.append(FileContext(path, source, tree))
+
+    project = Project(contexts)
+    findings: List[Finding] = []
+    for ctx in contexts:
+        for code in codes:
+            rule = RULES[code]
+            findings.extend(f for f in rule.check(ctx, project) if not ctx.suppressed(f))
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+    return findings, errors
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """``repro-lint`` CLI.  Exit 0 clean, 1 findings, 2 usage/parse errors."""
+    from repro.analysis.rules import RULES
+
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX/Pallas-aware static lint for this repo's bug classes.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--vmem", action="store_true",
+                    help="also run the static Pallas VMEM bucket check "
+                         "(imports jax)")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code in sorted(RULES):
+            print(f"{code}  {RULES[code].summary}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip() for c in args.select.split(",") if c.strip()]
+    try:
+        findings, errors = lint_paths(args.paths, select=select)
+    except ValueError as exc:
+        print(str(exc), file=sys.stderr)
+        return 2
+
+    for err in errors:
+        print(f"error: {err}", file=sys.stderr)
+    for finding in findings:
+        print(finding.render())
+
+    status = 0
+    if errors:
+        status = 2
+    if findings:
+        print(f"\n{len(findings)} finding(s). Suppress a deliberate one with "
+              "`# repro-lint: disable=CODE` on or above the line.")
+        status = max(status, 1)
+
+    if args.vmem:
+        from repro.analysis import vmem
+
+        failures = vmem.report(sys.stdout)
+        if failures:
+            status = max(status, 1)
+
+    if status == 0:
+        print("repro-lint: clean")
+    return status

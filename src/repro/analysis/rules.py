@@ -1,0 +1,623 @@
+"""The rule set: eight bug classes distilled from this repo's own history.
+
+Each rule is a :class:`Rule` with a code, a one-line summary, and a
+``check(ctx, project)`` returning :class:`~repro.analysis.core.Finding`\\ s.
+The heuristics are tuned to this codebase — they know the ``*_cache_key``
+convention, the ``current_*`` ambient readers, and the kernels/ no-assert
+contract — and they prefer missing an exotic case over flooding the tree
+with false positives: every rule here fires on a bug an earlier PR actually
+had to fix by hand.
+
+Origin of each rule (see git history):
+
+* RPL001/RPL002 — hidden ``PRNGKey(0)`` reuse in demos and the engine
+  (PR 2, PR 6): every run silently shared entropy.
+* RPL003 — ``lru_cache`` over a jitted Ising solver (PR 5): one retained
+  executable per problem instance, unbounded.
+* RPL004 — ``dataclass(eq=True)`` holding jax arrays (PR 7's
+  ``_SlabEntry``): ``entries.remove()`` crashed on ambiguous array ``==``.
+* RPL005 — ``assert`` in kernel code (PR 2): stripped under ``-O``,
+  trace-time failure on traced operands.
+* RPL006 — Python control flow on traced operands: the class of bug the
+  functional-core refactor (PR 1) exists to prevent.
+* RPL007 — float couplings truncated by ``astype(int32)`` (PR 5).
+* RPL008 — ambient context consumed by traced code but missing from the
+  jit cache key: the exact bug class ``_sharding_cache_key`` was built to
+  close (PR 9).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import FileContext, Finding, Project
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def qual(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain (``jax.random.PRNGKey``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = qual(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def qual_tail(node: ast.AST) -> Optional[str]:
+    """Last component of a dotted name (``PRNGKey``), or None."""
+    q = qual(node)
+    return q.split(".")[-1] if q else None
+
+
+#: Decorator/call names that put a function body under a jax trace.
+TRACING_TRANSFORMS = {"jit", "vmap", "pmap", "shard_map"}
+
+FunctionNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _decorator_transform(dec: ast.AST) -> Tuple[Optional[str], Optional[ast.Call]]:
+    """(transform tail name, configuring Call) for one decorator node.
+
+    Handles ``@jax.jit``, ``@jit``, ``@jax.jit(...)``, and
+    ``@functools.partial(jax.jit, static_argnums=...)``.
+    """
+    if isinstance(dec, ast.Call):
+        tail = qual_tail(dec.func)
+        if tail == "partial" and dec.args:
+            return qual_tail(dec.args[0]), dec
+        return tail, dec
+    return qual_tail(dec), None
+
+
+def _static_param_names(fn: ast.FunctionDef, call: Optional[ast.Call]) -> Set[str]:
+    """Param names pinned static via static_argnames/static_argnums."""
+    params = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+    static: Set[str] = set()
+    if call is None:
+        return static
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                    static.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(node.value, int):
+                    if 0 <= node.value < len(params):
+                        static.add(params[node.value])
+    return static
+
+
+def traced_function_info(fn: ast.AST) -> Optional[Tuple[str, Set[str]]]:
+    """(transform name, traced param names) if ``fn`` is trace-decorated."""
+    if not isinstance(fn, FunctionNode):
+        return None
+    for dec in fn.decorator_list:
+        tail, call = _decorator_transform(dec)
+        if tail in TRACING_TRANSFORMS:
+            params = {
+                a.arg
+                for a in (*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs)
+            }
+            params.discard("self")
+            return tail, params - _static_param_names(fn, call)
+    return None
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    if not isinstance(fn, FunctionNode):
+        return False
+    return any(_decorator_transform(d)[0] == "jit" for d in fn.decorator_list)
+
+
+def scope_statements(scope: ast.AST) -> Iterator[ast.AST]:
+    """All nodes of one function/module scope, excluding nested scopes."""
+    root_body = scope.body if isinstance(scope, (ast.Module, *FunctionNode)) else [scope]
+    stack: List[ast.AST] = list(root_body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (*FunctionNode, ast.ClassDef, ast.Lambda)):
+            continue  # nested scope: its own iter_scopes entry covers it
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def iter_scopes(tree: ast.Module) -> Iterator[ast.AST]:
+    """The module scope plus every (possibly nested) function scope."""
+    yield tree
+    for node in ast.walk(tree):
+        if isinstance(node, FunctionNode):
+            yield node
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    check: Callable[[FileContext, Project], List[Finding]]
+
+
+def _finding(ctx: FileContext, node: ast.AST, code: str, message: str) -> Finding:
+    return Finding(ctx.path, node.lineno, node.col_offset + 1, code, message)
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — bare PRNGKey(literal) outside tests/benchmarks
+# ---------------------------------------------------------------------------
+
+
+def check_rpl001(ctx: FileContext, project: Project) -> List[Finding]:
+    if ctx.is_test_path:
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or qual_tail(node.func) != "PRNGKey":
+            continue
+        if node.args and isinstance(node.args[0], ast.Constant) and isinstance(
+            node.args[0].value, int
+        ):
+            out.append(_finding(
+                ctx, node, "RPL001",
+                f"bare jax.random.PRNGKey({node.args[0].value!r}) outside "
+                "tests/benchmarks: every run shares entropy — accept a "
+                "seed/key parameter and derive per-use keys with "
+                "jax.random.split or fold_in",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — same key passed to ≥2 random ops without split/fold_in between
+# ---------------------------------------------------------------------------
+
+#: jax.random calls that *derive* fresh keys (sanctioned consumption).
+_KEY_DERIVERS = {"split", "fold_in", "clone", "wrap_key_data"}
+
+
+def _random_op(node: ast.Call) -> Optional[str]:
+    """Op name if this is a ``jax.random.<op>``-style call, else None."""
+    q = qual(node.func)
+    if not q:
+        return None
+    parts = q.split(".")
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jr"):
+        return parts[-1]
+    return None
+
+
+def _key_argument(node: ast.Call) -> Optional[str]:
+    if node.args and isinstance(node.args[0], ast.Name):
+        return node.args[0].id
+    for kw in node.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+def _assigned_names(node: ast.AST) -> Iterator[ast.Name]:
+    targets: Sequence[ast.AST] = ()
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+        targets = (node.target,)
+    elif isinstance(node, ast.For):
+        targets = (node.target,)
+    elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+        targets = (node.optional_vars,)
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                yield sub
+
+
+def check_rpl002(ctx: FileContext, project: Project) -> List[Finding]:
+    out = []
+    for scope in iter_scopes(ctx.tree):
+        # (line, col, kind, name, node); assignments sort after any call on
+        # the same line so `key = jax.random.split(key)[0]` resets last.
+        events: List[Tuple[int, int, str, str, ast.AST]] = []
+        for node in scope_statements(scope):
+            if isinstance(node, ast.Call):
+                op = _random_op(node)
+                if op is None or op == "PRNGKey":
+                    continue
+                name = _key_argument(node)
+                if name is None:
+                    continue
+                kind = "derive" if op in _KEY_DERIVERS else "use"
+                events.append((node.lineno, node.col_offset, kind, name, node))
+            else:
+                for target in _assigned_names(node):
+                    events.append((target.lineno, 10**6, "assign", target.id, target))
+        uses: Dict[str, int] = {}
+        for _, _, kind, name, node in sorted(events, key=lambda e: (e[0], e[1])):
+            if kind in ("assign", "derive"):
+                uses[name] = 0
+            else:
+                uses[name] = uses.get(name, 0) + 1
+                if uses[name] >= 2:
+                    out.append(_finding(
+                        ctx, node, "RPL002",
+                        f"key {name!r} feeds a second jax.random op without "
+                        "an intervening split/fold_in — correlated samples; "
+                        "derive one subkey per op",
+                    ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — lru_cache/cache over jit-calling functions
+# ---------------------------------------------------------------------------
+
+
+def _module_jitted_names(tree: ast.Module) -> Set[str]:
+    jitted: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, FunctionNode) and _is_jit_decorated(node):
+            jitted.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            tail, _ = _decorator_transform(node.value)
+            if tail == "jit":
+                for target in node.targets:
+                    if isinstance(target, ast.Name):
+                        jitted.add(target.id)
+    return jitted
+
+
+def check_rpl003(ctx: FileContext, project: Project) -> List[Finding]:
+    jitted = _module_jitted_names(ctx.tree)
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, FunctionNode):
+            continue
+        cache_dec = None
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if qual_tail(target) in ("lru_cache", "cache"):
+                cache_dec = dec
+                break
+        if cache_dec is None:
+            continue
+        calls_jit = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = qual_tail(node.func)
+            if tail == "jit" or tail in jitted:
+                calls_jit = True
+                break
+        if calls_jit:
+            out.append(_finding(
+                ctx, cache_dec, "RPL003",
+                f"functools cache on {fn.name!r}, which calls jax.jit or a "
+                "jitted symbol: each distinct call retains a compiled "
+                "executable forever — key a bounded registry on static "
+                "config instead (see repro.kernels.autotune)",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL004 — @dataclass without eq=False holding jax arrays / pytrees
+# ---------------------------------------------------------------------------
+
+#: Annotation tokens that mean "this field can hold a jax array or pytree".
+_ARRAYISH = re.compile(
+    r"\b(Array|ArrayLike|ndarray|OnnParams|OnnState|BatchState|ONNResult"
+    r"|MaxCutResult|QuantizedWeights|PyTree)\b"
+)
+
+
+def check_rpl004(ctx: FileContext, project: Project) -> List[Finding]:
+    out = []
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        dc = None
+        eq_false = False
+        for dec in cls.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if qual_tail(target) != "dataclass":
+                continue
+            dc = dec
+            if isinstance(dec, ast.Call):
+                for kw in dec.keywords:
+                    if kw.arg == "eq" and isinstance(kw.value, ast.Constant):
+                        eq_false = kw.value.value is False
+        if dc is None or eq_false:
+            continue
+        arrayish = [
+            stmt for stmt in cls.body
+            if isinstance(stmt, ast.AnnAssign)
+            and _ARRAYISH.search(ast.unparse(stmt.annotation))
+        ]
+        if arrayish:
+            fields = ", ".join(ast.unparse(s.target) for s in arrayish)
+            out.append(_finding(
+                ctx, cls, "RPL004",
+                f"@dataclass {cls.name!r} holds array-typed fields "
+                f"({fields}) without eq=False: the generated __eq__ "
+                "compares jax arrays elementwise, so ==, `in`, and "
+                "list.remove() raise or trace (the _SlabEntry bug) — "
+                "declare @dataclass(eq=False) to compare by identity",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — assert in kernels/ and inside jitted functions
+# ---------------------------------------------------------------------------
+
+
+def check_rpl005(ctx: FileContext, project: Project) -> List[Finding]:
+    out = []
+    if ctx.in_kernels and not ctx.is_test_path:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assert):
+                out.append(_finding(
+                    ctx, node, "RPL005",
+                    "assert in kernel code: stripped under python -O and "
+                    "fails at trace time on traced operands — raise "
+                    "ValueError from the wrapper (see "
+                    "coupling_kernel._require) or use checkify",
+                ))
+        return out
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, FunctionNode) or not _is_jit_decorated(fn):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assert):
+                out.append(_finding(
+                    ctx, node, "RPL005",
+                    f"assert inside jitted function {fn.name!r}: stripped "
+                    "under python -O and a trace-time error on traced "
+                    "operands — validate before the jit boundary or use "
+                    "checkify",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL006 — Python if/while on traced operands inside traced functions
+# ---------------------------------------------------------------------------
+
+#: Calls whose result on a traced argument is static/python (safe tests).
+_STATIC_CALLS = {"isinstance", "len", "hasattr", "getattr", "callable", "type"}
+
+
+def _traced_names_in_test(test: ast.AST, traced: Set[str]) -> List[ast.Name]:
+    found: List[ast.Name] = []
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, ast.Attribute):
+            return  # x.shape / x.ndim / x.dtype are static metadata
+        if isinstance(node, ast.Call):
+            if qual_tail(node.func) in _STATIC_CALLS:
+                return
+            for arg in node.args:
+                visit(arg)
+            for kw in node.keywords:
+                visit(kw.value)
+            return
+        if isinstance(node, ast.Compare):
+            operands = [node.left, *node.comparators]
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops) and any(
+                isinstance(c, ast.Constant) and c.value is None for c in operands
+            ):
+                return  # `x is (not) None` inspects the python value
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in traced:
+                found.append(node)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(test)
+    return found
+
+
+def check_rpl006(ctx: FileContext, project: Project) -> List[Finding]:
+    out = []
+    for fn in ast.walk(ctx.tree):
+        info = traced_function_info(fn)
+        if info is None:
+            continue
+        transform, traced = info
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.If, ast.While)):
+                continue
+            hits = _traced_names_in_test(node.test, traced)
+            if hits:
+                kw = "while" if isinstance(node, ast.While) else "if"
+                out.append(_finding(
+                    ctx, node, "RPL006",
+                    f"python `{kw}` on traced value {hits[0].id!r} inside "
+                    f"{transform}-decorated {fn.name!r}: concretization "
+                    "error or one branch silently baked into the "
+                    "executable — use jax.lax.cond/while_loop, jnp.where, "
+                    "or add the argument to static_argnames",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL007 — dtype-narrowing astype on values flowing from float parameters
+# ---------------------------------------------------------------------------
+
+_INT_ANNOTATION = re.compile(r"\b(int|u?int\d+|bool|bool_)\b")
+_INT_DTYPE_ARG = re.compile(r"\b(int|u?int\d+|bool|bool_)\b")
+#: A mention of any of these applied to a name counts as a dtype guard.
+_GUARD_FUNCTIONS = {
+    "_require_int_dtype", "require_int_dtype", "check_weight_range",
+    "validate_weights", "round", "rint", "floor", "ceil", "trunc",
+}
+#: Parameters that carry couplings/weights/biases — the values user code
+#: actually hands in as floats (the PR 5 bug was float max-cut couplings).
+#: Phase counters, spins, and packed bytes are int by construction and are
+#: deliberately not tainted.
+_WEIGHTISH_NAMES = {"w", "wq", "h", "j", "xi", "bias", "adj", "couplings"}
+_WEIGHTISH_PREFIXES = ("w_", "weight", "coupling", "bias", "adj")
+
+
+def _weightish(name: str) -> bool:
+    low = name.lower()
+    return low in _WEIGHTISH_NAMES or low.startswith(_WEIGHTISH_PREFIXES)
+
+
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+
+def _walk_outside_comprehensions(node: ast.AST) -> Iterator[ast.AST]:
+    stack = [node]
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, _COMPREHENSIONS):
+            continue
+        yield cur
+        stack.extend(ast.iter_child_nodes(cur))
+
+
+def _tainted_params(fn: ast.FunctionDef) -> Set[str]:
+    tainted: Set[str] = set()
+    for arg in (*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs):
+        if arg.arg == "self" or not _weightish(arg.arg):
+            continue
+        if arg.annotation is not None and _INT_ANNOTATION.search(
+            ast.unparse(arg.annotation)
+        ):
+            continue
+        tainted.add(arg.arg)
+    return tainted
+
+
+def _guarded_names(fn: ast.AST) -> Set[str]:
+    guarded: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "dtype":
+            if isinstance(node.value, ast.Name):
+                guarded.add(node.value.id)
+        elif isinstance(node, ast.Call) and qual_tail(node.func) in _GUARD_FUNCTIONS:
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    guarded.add(arg.id)
+    return guarded
+
+
+def check_rpl007(ctx: FileContext, project: Project) -> List[Finding]:
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, FunctionNode):
+            continue
+        tainted = _tainted_params(fn)
+        if not tainted:
+            continue
+        guarded = _guarded_names(fn)
+        # Propagate taint through simple assignments, in line order.  Names
+        # that appear only inside comprehensions do not propagate: driving a
+        # listcomp over engine futures is not dataflow into the result's
+        # numeric range.
+        assigns = [n for n in scope_statements(fn) if isinstance(n, ast.Assign)]
+        for node in sorted(assigns, key=lambda n: n.lineno):
+            touched = {
+                sub.id
+                for sub in _walk_outside_comprehensions(node.value)
+                if isinstance(sub, ast.Name) and sub.id in tainted
+            }
+            if touched:
+                tainted.update(
+                    t.id for t in node.targets if isinstance(t, ast.Name)
+                )
+        for node in ast.walk(fn):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+                and isinstance(node.func.value, ast.Name)
+            ):
+                continue
+            name = node.func.value.id
+            if name not in tainted or name in guarded:
+                continue
+            dtype_nodes = list(node.args) + [
+                kw.value for kw in node.keywords if kw.arg == "dtype"
+            ]
+            dtype_txt = ast.unparse(dtype_nodes[0]) if dtype_nodes else ""
+            if _INT_DTYPE_ARG.search(dtype_txt):
+                out.append(_finding(
+                    ctx, node, "RPL007",
+                    f"{name}.astype({dtype_txt}) narrows a value that can "
+                    "arrive as float — fractions are silently truncated "
+                    "(the PR 5 coupling bug); check the input dtype first "
+                    "(e.g. _require_int_dtype) or round explicitly",
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL008 — ambient current_* reads not covered by any *_cache_key
+# ---------------------------------------------------------------------------
+
+
+def check_rpl008(ctx: FileContext, project: Project) -> List[Finding]:
+    if not project.has_cache_key_fn or ctx.is_test_path:
+        return []
+    out = []
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, FunctionNode):
+            continue
+        if fn.name.endswith("_cache_key") or fn.name == "cache_key":
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            tail = qual_tail(node.func)
+            if not tail or not tail.startswith("current_"):
+                continue
+            if tail in project.cache_key_reads or tail in ctx.defined_functions:
+                continue
+            out.append(_finding(
+                ctx, node, "RPL008",
+                f"ambient {tail}() read in {fn.name!r} but absent from "
+                "every *_cache_key function: executables will be silently "
+                f"reused across {tail} changes — add it to the cache key "
+                "or pass the value explicitly",
+            ))
+    return out
+
+
+RULES: Dict[str, Rule] = {
+    rule.code: rule
+    for rule in (
+        Rule("RPL001",
+             "bare jax.random.PRNGKey(literal) outside tests/benchmarks",
+             check_rpl001),
+        Rule("RPL002",
+             "same key passed to ≥2 jax.random ops without split/fold_in",
+             check_rpl002),
+        Rule("RPL003",
+             "functools.lru_cache/cache over a jit-calling function",
+             check_rpl003),
+        Rule("RPL004",
+             "@dataclass without eq=False holding jax array/pytree fields",
+             check_rpl004),
+        Rule("RPL005",
+             "assert in kernels/ or inside jitted functions",
+             check_rpl005),
+        Rule("RPL006",
+             "python if/while on a traced operand in a traced function",
+             check_rpl006),
+        Rule("RPL007",
+             "int astype on a value flowing unguarded from float params",
+             check_rpl007),
+        Rule("RPL008",
+             "ambient current_* read missing from every *_cache_key",
+             check_rpl008),
+    )
+}

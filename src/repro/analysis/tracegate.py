@@ -1,0 +1,420 @@
+"""Compile-budget gate: pinned workloads, committed trace-count budget.
+
+The repo's performance story rests on *trace flatness*: install → solve →
+install → solve must reuse jit executables, and a steady-state serving loop
+must trace **nothing**.  Unit tests assert this for the paths they happen
+to cover; this gate pins a workload matrix — one-shot retrieval, max-cut,
+a continuous-serving tick loop, and a mid-stream hot swap — runs each
+twice, and diffs the observed ``TRACE_COUNTER`` / ``TUNE_COUNTER`` deltas
+against the committed ``TRACE_BUDGET.json`` at the repo root:
+
+* the **warm** pass (first run, cold jit caches) must trace exactly the
+  budgeted executables — a new entry means an accidental extra compile
+  (e.g. a config field that stopped hashing equal);
+* the **steady** pass (identical second run) must trace *zero* — any
+  nonzero delta is a retrace leak, the bug class PR 3/6/7 each fixed once.
+
+Workloads run in the pinned order below and share one process, exactly as
+committed; reordering changes which pass first traces a shared executable,
+so the budget is only meaningful against this order.
+
+Regenerate the budget after an intentional compile-graph change with
+``python -m repro.analysis.tracegate --update`` and commit the diff —
+the diff *is* the review artifact.  ``--inject-retrace`` demonstrates the
+failure mode by tracing a never-bucketed shape inside a measured steady
+window.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Root seed for every key the workloads draw; per-use keys are fold_in
+#: derived so the matrix is reproducible and no key is used twice.
+_SEED = 0
+
+#: Committed budget, at the repo root next to BENCH_BASELINE.
+DEFAULT_BUDGET_PATH = Path(__file__).resolve().parents[3] / "TRACE_BUDGET.json"
+
+#: Pinned execution order (see module docstring).
+WORKLOAD_ORDER = ("retrieve", "maxcut", "serving_tick", "hot_swap")
+
+Delta = Dict[str, int]
+
+
+def snapshot() -> Delta:
+    """All trace/tune counters merged under stable dotted prefixes."""
+    from repro import train as train_lib
+    from repro.core import dynamics
+    from repro.kernels import autotune, ops
+
+    merged: Delta = {}
+    for prefix, counts in (
+        ("dynamics", dict(dynamics.TRACE_COUNTER)),
+        ("ops", dict(ops.TRACE_COUNTER)),
+        ("train", dict(train_lib.TRACE_COUNTER)),
+        ("autotune", {"miss": autotune.TUNE_COUNTER["miss"]}),
+    ):
+        for key, value in counts.items():
+            merged[f"{prefix}.{key}"] = int(value)
+    return merged
+
+
+def counter_delta(before: Delta, after: Delta) -> Delta:
+    """Nonzero counter movements between two snapshots, sorted by key."""
+    return {
+        key: after[key] - before.get(key, 0)
+        for key in sorted(after)
+        if after[key] - before.get(key, 0) != 0
+    }
+
+
+# ---------------------------------------------------------------------------
+# Workloads.  Each factory returns a zero-arg pass: the first call builds
+# the engine and serves (warm), the second call serves the *identical*
+# shape/bucket stream on the same engine (steady — must trace nothing).
+# ---------------------------------------------------------------------------
+
+
+def _patterns(seed: int, p: int, n: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.choice([-1, 1], (p, n)), jnp.int8)
+
+
+def _corrupt(xi: jax.Array, row: int, flips: int, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    v = np.asarray(xi[row]).copy()
+    idx = rng.choice(v.size, flips, replace=False)
+    v[idx] = -v[idx]
+    return jnp.asarray(v, jnp.int8)
+
+
+def _wl_retrieve(smoke: bool) -> Callable[[], None]:
+    """One-shot engine, pallas retrieval, two batch buckets.
+
+    ``smoke`` shortens the settle horizon only — the request stream (and so
+    the bucket/shape matrix the jit cache sees) is byte-identical to the
+    full run, which is what lets one committed budget gate both modes.
+    """
+    from repro import engine as engine_lib
+
+    xi = _patterns(1, 4, 64)
+    singles = [_corrupt(xi, i % 4, 6, 30 + i) for i in range(4)]
+    pair = jnp.stack([np.asarray(s) for s in singles[:2]]).astype(jnp.int8)
+    state: Dict[str, object] = {}
+
+    def run() -> None:
+        if "eng" not in state:
+            eng = engine_lib.Engine(jax.random.PRNGKey(_SEED), batch_buckets=(1, 2, 4))
+            eng.install(
+                "mem", "retrieval", xi=xi, max_cycles=20 if smoke else 40,
+                settle_chunk=1, backend="pallas",
+            )
+            state["eng"] = eng
+        eng = state["eng"]
+        futs = [eng.submit(engine_lib.Request("mem", s)) for s in singles]
+        futs.append(eng.submit(engine_lib.Request("mem", pair)))
+        eng.drain()
+        for f in futs:
+            f.result()
+
+    return run
+
+
+def _wl_maxcut(smoke: bool) -> Callable[[], None]:
+    """One-shot engine, randomized max-cut sweeps on two graph sizes."""
+    from repro import engine as engine_lib
+    from repro.core.ising import random_graph
+
+    root = jax.random.PRNGKey(_SEED)
+    graphs = [
+        random_graph(jax.random.fold_in(root, i), n, 0.5)
+        for i, n in enumerate((20, 24))
+    ]
+    keys = [jax.random.fold_in(root, 100 + i) for i in range(len(graphs))]
+    state: Dict[str, object] = {}
+
+    def run() -> None:
+        if "eng" not in state:
+            eng = engine_lib.Engine(
+                jax.random.fold_in(root, 7), batch_buckets=(1, 2, 4)
+            )
+            eng.install("cuts", "maxcut", sweeps=4 if smoke else 8)
+            state["eng"] = eng
+        eng = state["eng"]
+        futs = [
+            eng.submit(engine_lib.Request("cuts", adj, key=k))
+            for adj, k in zip(graphs, keys)
+        ]
+        eng.drain()
+        for f in futs:
+            f.result()
+
+    return run
+
+
+def _wl_serving_tick(smoke: bool) -> Callable[[], None]:
+    """Continuous-batching tick loop: admit, step per arrival, flush."""
+    from repro import serving
+    from repro.engine import engine as engine_lib
+
+    xi = _patterns(2, 3, 32)
+    reqs = [_corrupt(xi, i % 3, 4, 50 + i) for i in range(6)]
+    root = jax.random.PRNGKey(_SEED)
+    keys = [jax.random.fold_in(root, 200 + i) for i in range(len(reqs))]
+    state: Dict[str, object] = {}
+
+    def run() -> None:
+        if "eng" not in state:
+            eng = serving.ContinuousEngine(
+                jax.random.fold_in(root, 8), batch_buckets=(1, 2, 4), slab_lanes=4
+            )
+            eng.install(
+                "mem", "retrieval", xi=xi, max_cycles=20 if smoke else 40,
+                settle_chunk=1,
+            )
+            state["eng"] = eng
+        eng = state["eng"]
+        futs = []
+        for r, k in zip(reqs, keys):
+            futs.append(eng.submit(engine_lib.Request("mem", r, key=k)))
+            eng.step()  # serve as they arrive: varying slab packings
+        eng.flush()
+        for f in futs:
+            f.result()
+
+    return run
+
+
+def _wl_hot_swap(smoke: bool) -> Callable[[], None]:
+    """Train fresh weights and swap them into a live serving engine.
+
+    Every pass trains on *different* patterns of the *same* shape — the
+    steady pass proves a weight refresh is a pure data install, tracing
+    neither the trainer nor the serving path.
+    """
+    from repro import serving, train
+    from repro.engine import engine as engine_lib
+
+    n = 24
+    xi_old = _patterns(3, 3, n)
+    probes = [_corrupt(xi_old, i, 5, 70 + i) for i in range(2)]
+    root = jax.random.PRNGKey(_SEED)
+    keys = [jax.random.fold_in(root, 300 + i) for i in range(2)]
+    state: Dict[str, object] = {"swaps": 0}
+
+    def run() -> None:
+        if "eng" not in state:
+            eng = serving.ContinuousEngine(
+                jax.random.fold_in(root, 9), batch_buckets=(1, 2, 4), slab_lanes=4
+            )
+            # Same settle horizon as serving_tick: its padded slab config is
+            # identical, so the steady serving executable is shared — warm
+            # counts here budget only the trainer.
+            eng.install(
+                "mem", "retrieval", xi=xi_old, max_cycles=20 if smoke else 40,
+                settle_chunk=1,
+            )
+            state["eng"] = eng
+        eng = state["eng"]
+        cfg = eng.solver("mem").config
+        state["swaps"] = int(state["swaps"]) + 1
+        xi_new = _patterns(10 + int(state["swaps"]), xi_old.shape[0], n)
+        res = train.train_doi(xi_new, train.TrainConfig(qat_bits=cfg.weight_bits))
+        params, _ = train.trained_params(cfg, res.weights)
+        eng.hot_swap("mem", params)
+        futs = [
+            eng.submit(engine_lib.Request("mem", p, key=k))
+            for p, k in zip(probes, keys)
+        ]
+        eng.flush()
+        for f in futs:
+            f.result()
+
+    return run
+
+
+_FACTORIES: Dict[str, Callable[[bool], Callable[[], None]]] = {
+    "retrieve": _wl_retrieve,
+    "maxcut": _wl_maxcut,
+    "serving_tick": _wl_serving_tick,
+    "hot_swap": _wl_hot_swap,
+}
+
+#: Shapes already handed to :func:`inject_retrace` this process (each must
+#: be fresh, or the second injection would hit the jit cache and "pass").
+_INJECTED: List[int] = []
+
+
+def inject_retrace() -> None:
+    """Trace one never-bucketed shape — a deliberate steady-window leak."""
+    from repro.kernels import ops
+
+    n = 152 + 8 * len(_INJECTED)  # off every bucket and block multiple
+    _INJECTED.append(n)
+    w = jnp.zeros((n, n), jnp.int8)
+    sigma = jnp.ones((3, n), jnp.int8)
+    ops.coupling_sum(w, sigma).block_until_ready()
+
+
+def measure(
+    *, smoke: bool = False, inject: bool = False
+) -> Dict[str, Dict[str, Delta]]:
+    """Run the pinned matrix; per workload, the warm and steady deltas."""
+    observed: Dict[str, Dict[str, Delta]] = {}
+    for name in WORKLOAD_ORDER:
+        run = _FACTORIES[name](smoke)
+        before = snapshot()
+        run()
+        warm = counter_delta(before, snapshot())
+        before = snapshot()
+        run()
+        if inject and name == "retrieve":
+            inject_retrace()
+        steady = counter_delta(before, snapshot())
+        observed[name] = {"warm": warm, "steady": steady}
+    return observed
+
+
+class GateResult(NamedTuple):
+    passed: bool
+    observed: Dict[str, Dict[str, Delta]]
+    diffs: List[str]
+
+
+def load_budget(path: Path = DEFAULT_BUDGET_PATH) -> Dict:
+    if not path.exists():
+        raise FileNotFoundError(
+            f"trace budget {path} is missing; generate it with "
+            "`python -m repro.analysis.tracegate --update` and commit it"
+        )
+    try:
+        budget = json.loads(path.read_text())
+    except json.JSONDecodeError as exc:
+        raise ValueError(
+            f"trace budget {path} is not valid JSON ({exc}); regenerate it "
+            "with `python -m repro.analysis.tracegate --update`"
+        ) from exc
+    if "workloads" not in budget:
+        raise ValueError(
+            f"trace budget {path} has no 'workloads' table; regenerate it "
+            "with `python -m repro.analysis.tracegate --update`"
+        )
+    return budget
+
+
+def run_gate(
+    budget_path: Path = DEFAULT_BUDGET_PATH,
+    *,
+    smoke: bool = False,
+    check_warm: bool = True,
+    inject: bool = False,
+    observed: Optional[Dict[str, Dict[str, Delta]]] = None,
+) -> GateResult:
+    """Measure the matrix and diff it against the committed budget.
+
+    ``check_warm=False`` compares only the steady passes — the mode for
+    in-process tests, where earlier tests have already traced some of the
+    warm set (steady-pass zeros are immune to jit-cache pollution).
+    """
+    budget = load_budget(budget_path)
+    if observed is None:
+        observed = measure(smoke=smoke, inject=inject)
+    diffs: List[str] = []
+    for name in WORKLOAD_ORDER:
+        budgeted = budget["workloads"].get(name)
+        if budgeted is None:
+            diffs.append(f"{name}: not in budget (regenerate with --update)")
+            continue
+        got = observed[name]
+        if check_warm and got["warm"] != budgeted["warm"]:
+            diffs.append(
+                f"{name}.warm: expected {budgeted['warm']}, observed {got['warm']}"
+            )
+        if got["steady"] != budgeted["steady"]:
+            diffs.append(
+                f"{name}.steady: expected {budgeted['steady']}, observed "
+                f"{got['steady']} — a steady-state retrace leak"
+            )
+    return GateResult(passed=not diffs, observed=observed, diffs=diffs)
+
+
+def _write_budget(path: Path, observed: Dict[str, Dict[str, Delta]], smoke: bool) -> None:
+    payload = {
+        "_meta": {
+            "order": list(WORKLOAD_ORDER),
+            "note": (
+                "Warm = first-pass trace/tune deltas per workload (pinned "
+                "order, shared process); steady = identical second pass, "
+                "budgeted at zero. Regenerate: python -m "
+                "repro.analysis.tracegate --update"
+            ),
+            "smoke": smoke,
+        },
+        "workloads": observed,
+    }
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.tracegate",
+        description="Diff observed trace/tune counter deltas against TRACE_BUDGET.json.",
+    )
+    ap.add_argument("--budget", type=Path, default=DEFAULT_BUDGET_PATH,
+                    help="budget file (default: repo-root TRACE_BUDGET.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer requests per workload (identical shape matrix, "
+                         "so trace counts match the full run)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the budget from this run instead of gating")
+    ap.add_argument("--inject-retrace", action="store_true",
+                    help="deliberately trace a novel shape inside a measured "
+                         "steady window (the gate must fail)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the observed deltas + diffs as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+
+    observed = measure(smoke=args.smoke, inject=args.inject_retrace)
+    if args.update:
+        _write_budget(args.budget, observed, args.smoke)
+        print(f"tracegate: wrote {args.budget}")
+        return 0
+
+    try:
+        result = run_gate(args.budget, observed=observed)
+    except (FileNotFoundError, ValueError) as exc:
+        print(f"tracegate: {exc}", file=sys.stderr)
+        return 2
+
+    if args.out is not None:
+        args.out.write_text(
+            json.dumps(
+                {"passed": result.passed, "diffs": result.diffs,
+                 "observed": result.observed},
+                indent=2, sort_keys=True,
+            ) + "\n"
+        )
+
+    for diff in result.diffs:
+        print(f"tracegate: {diff}")
+    if result.passed:
+        print(f"tracegate: {len(WORKLOAD_ORDER)} workloads within budget")
+        return 0
+    print("tracegate: compile budget violated — an executable was traced that "
+          "the committed TRACE_BUDGET.json does not account for. If the "
+          "change is intentional, regenerate with --update and commit the "
+          "diff.", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -82,7 +82,7 @@ class Solver(Protocol):
         ...
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class RetrievalSolver:
     """Batched pattern retrieval on a fixed trained ONN (paper Fig. 7).
 

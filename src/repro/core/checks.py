@@ -1,0 +1,37 @@
+"""Trace-time dtype contracts for the integer compute paths.
+
+PR 5 fixed float Max-Cut couplings that ``astype(int32)`` silently
+truncated deep inside the solve path; the repo linter (RPL007,
+:mod:`repro.analysis.rules`) now flags unguarded narrowing casts on
+weight-carrying values.  :func:`require_int_dtype` is the sanctioned
+guard: dtypes are static under tracing, so the check runs at *trace* time,
+costs nothing per solve, and turns silent truncation into an immediate
+``TypeError`` naming the offending operand.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def require_int_dtype(x: Optional[jax.Array], name: str) -> Optional[jax.Array]:
+    """Return ``x`` after checking it carries an integer/bool dtype.
+
+    ``None`` passes through (optional bias operands).  Floats must be
+    quantized explicitly (:func:`repro.core.quantization.quantize_weights`)
+    before entering the int8/int32 compute paths — a float arriving here
+    would otherwise be truncated toward zero, not rounded.
+    """
+    if x is None:
+        return None
+    dtype = jnp.asarray(x).dtype if not hasattr(x, "dtype") else x.dtype
+    if jnp.issubdtype(dtype, jnp.integer) or jnp.issubdtype(dtype, jnp.bool_):
+        return x
+    raise TypeError(
+        f"{name} must be an integer array for the int compute path, got "
+        f"{dtype}; quantize floats explicitly (e.g. "
+        "repro.core.quantization.quantize_weights) before the kernels"
+    )

@@ -18,6 +18,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.checks import require_int_dtype
+
 
 def _check(w: jax.Array, sigma: jax.Array) -> None:
     # w is (M, N): M output rows contracting over N spins.  M == N for a
@@ -37,6 +39,7 @@ def weighted_sum_parallel(w: jax.Array, sigma: jax.Array) -> jax.Array:
     parallel contraction.
     """
     _check(w, sigma)
+    require_int_dtype(w, "w")
     return jnp.einsum(
         "ij,...j->...i",
         w.astype(jnp.int32),
@@ -57,6 +60,7 @@ def weighted_sum_serial(w: jax.Array, sigma: jax.Array, chunk: int = 1) -> jax.A
     leaves the integer sum unchanged.
     """
     _check(w, sigma)
+    require_int_dtype(w, "w")
     if chunk <= 0:
         raise ValueError(f"chunk must be positive, got {chunk}")
     n_rows, n = w.shape

@@ -68,6 +68,7 @@ import jax.numpy as jnp
 
 from repro.core import coupling as coupling_lib
 from repro.core import oscillator as osc
+from repro.core.checks import require_int_dtype
 from repro.core.quantization import check_weight_range
 
 _BACKEND_NAMES = ("parallel", "serial", "pallas", "hybrid")
@@ -395,6 +396,7 @@ def hybrid_mac_sum(w: jax.Array, sigma: jax.Array, parallel: int) -> jax.Array:
     """
     if parallel <= 0:
         raise ValueError(f"parallel must be positive, got {parallel}")
+    require_int_dtype(w, "w")
     n_rows, n = w.shape
     passes = -(-n // parallel)
     pad = passes * parallel - n
@@ -946,18 +948,18 @@ def _batch_result(cfg: ONNConfig, c: _BatchCarry) -> ONNResult:
 # needs the full per-cycle comparison.
 # ---------------------------------------------------------------------------
 
-#: Largest padded N whose resident (N, N) int8 weight tile fits the
-#: multi-cycle kernel's VMEM budget (N² bytes ≤ 4 MiB at N = 2048).
-MULTI_KERNEL_MAX_N = 2048
-
-
 def _multi_kernel_eligible(cfg: ONNConfig) -> bool:
-    """Whether the whole-chunk Pallas kernel can hold this instance's W."""
-    return (
-        cfg.mode == "functional"
-        and cfg.backend == "pallas"
-        and -(-cfg.n // 128) * 128 <= MULTI_KERNEL_MAX_N
-    )
+    """Whether the whole-chunk Pallas kernel can hold this instance's W.
+
+    The padded-N ceiling lives in ``repro.kernels.autotune``
+    (``MULTI_KERNEL_MAX_N``) next to the VMEM budget it derives from;
+    imported lazily because the kernels package is optional.
+    """
+    if cfg.mode != "functional" or cfg.backend != "pallas":
+        return False
+    from repro.kernels import autotune  # lazy: kernels are optional
+
+    return -(-cfg.n // 128) * 128 <= autotune.MULTI_KERNEL_MAX_N
 
 
 def _chunk_multi(

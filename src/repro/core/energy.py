@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.checks import require_int_dtype
+
 
 def hamiltonian(
     j: jax.Array,
@@ -42,5 +44,5 @@ def is_local_minimum(j: jax.Array, sigma: jax.Array) -> jax.Array:
     For symmetric J with zero diagonal, flipping spin i changes the energy by
     ΔH = 2 σ_i Σ_j J_ij σ_j, so a local minimum has σ_i · field_i ≥ 0 ∀i.
     """
-    field = j.astype(jnp.int32) @ sigma.astype(jnp.int32)
+    field = require_int_dtype(j, "j").astype(jnp.int32) @ sigma.astype(jnp.int32)
     return jnp.all(sigma.astype(jnp.int32) * field >= 0)

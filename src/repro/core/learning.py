@@ -19,6 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.checks import require_int_dtype
+
 
 def hebbian(xi: jax.Array, self_coupling: bool = True) -> jax.Array:
     """W = (1/N) Σ_μ ξ^μ ξ^μᵀ  (optionally zeroing the diagonal)."""
@@ -85,6 +87,8 @@ def stability_margins(w: jax.Array, xi: jax.Array) -> jax.Array:
 def patterns_are_fixed_points(w_int8: jax.Array, xi: jax.Array) -> jax.Array:
     """True iff every pattern is a strict fixed point of the sign dynamics."""
     fields = jnp.einsum(
-        "ij,pj->pi", w_int8.astype(jnp.int32), xi.astype(jnp.int32)
+        "ij,pj->pi",
+        require_int_dtype(w_int8, "w_int8").astype(jnp.int32),
+        require_int_dtype(xi, "xi").astype(jnp.int32),
     )
     return jnp.all(xi.astype(jnp.int32) * fields > 0)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 DEFAULT_WEIGHT_BITS = 5
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class QuantizedWeights:
     """Symmetric-quantized integer weights plus dequantization scale."""
 

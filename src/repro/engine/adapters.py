@@ -79,7 +79,7 @@ def _fpga_design_tradeoff(
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class RetrievalSlab:
     """One in-flight continuous-batching slab (padded config + live state).
 

@@ -94,7 +94,7 @@ class QueueFullError(RuntimeError):
     """
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Request:
     """One unit of submitted work.
 
@@ -111,7 +111,7 @@ class Request:
     tenant: str = "default"
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Pending:
     request: Request
     future: Future

@@ -27,7 +27,7 @@ jit retrace they must *not* cause) resolve to identical static block tuples;
 from __future__ import annotations
 
 import collections
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, Iterator, NamedTuple, Tuple
 
 from repro.kernels import coupling_kernel as _k
 
@@ -36,8 +36,25 @@ from repro.kernels import coupling_kernel as _k
 #: output block.
 VMEM_BUDGET_BYTES = (16 * 2**20) // 4
 
+#: Budget for the multi-cycle kernel, whose (N, N) weight tile stays
+#: *resident* across the whole launch — no second weight tile is ever in
+#: flight, so it may use half of VMEM rather than a quarter.
+MULTI_VMEM_BUDGET_BYTES = (16 * 2**20) // 2
+
+#: Largest padded N whose resident (N, N) int8 weight tile fits the
+#: multi-cycle kernel's budget (N² bytes = 4 MiB at N = 2048, leaving the
+#: other 4 MiB for phase/bookkeeping blocks).  Single source of truth —
+#: ``repro.core.dynamics._multi_kernel_eligible`` gates on it.
+MULTI_KERNEL_MAX_N = 2048
+
 #: Kinds a block tuple can be tuned for; one cache entry per (kind, bucket).
 KINDS = ("step", "hybrid", "matvec", "multi")
+
+#: The (N, batch) grid the serving/engine stack actually buckets to; the
+#: static VMEM checker (``repro.analysis.vmem``) and the kernel benchmarks
+#: sweep exactly this grid via :func:`iter_buckets`.
+N_BUCKETS = (16, 32, 48, 64, 128, 256, 506, 512, 1024, 2048, 4096)
+BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 #: Cache hits/misses, incremented at resolution time.  Flat misses across
 #: repeated engine installs == the tuner re-resolved nothing.
@@ -101,7 +118,10 @@ def blocks_for(kind: str, *, n: int, batch: int, m: int | None = None) -> BlockC
     if kind == "multi":
         # 1-D grid over the batch; the weight matrix is a resident (N, N)
         # tile, so only block_b is free.  block_i/block_k are reported as N
-        # for the VMEM accounting.
+        # for the VMEM accounting.  The unpacked layout is the worst case.
+        n_padded = -(-n // 128) * 128
+        while bb > 8 and _k.multi_vmem_bytes(bb, n_padded, packed=False) > MULTI_VMEM_BUDGET_BYTES:
+            bb //= 2
         cfg = BlockConfig(bb, n, n)
     elif kind == "matvec":
         # f32 GEMV: long contraction blocks amortize the weight stream; the
@@ -131,6 +151,28 @@ def warm(*, n: int, batch: int, kinds: Tuple[str, ...] = ("step", "hybrid", "mul
     """
     for kind in kinds:
         blocks_for(kind, n=n, batch=batch)
+
+
+def iter_buckets(
+    kinds: Tuple[str, ...] = KINDS,
+) -> Iterator[Tuple[str, int, int]]:
+    """Every ``(kind, n, batch)`` bucket the tuner can be asked for.
+
+    The one sweep shared by the static VMEM checker
+    (``repro.analysis.vmem``) and ``benchmarks/kernels.py`` — a budget
+    regression in a bucket neither happens to exercise is impossible when
+    both enumerate the same grid.  Multi buckets whose padded N exceeds
+    :data:`MULTI_KERNEL_MAX_N` are skipped (``_multi_kernel_eligible``
+    never routes them to the kernel).
+    """
+    for kind in kinds:
+        if kind not in KINDS:
+            raise ValueError(f"unknown autotune kind {kind!r}; expected one of {KINDS}")
+        for n in N_BUCKETS:
+            if kind == "multi" and -(-n // 128) * 128 > MULTI_KERNEL_MAX_N:
+                continue
+            for batch in BATCH_BUCKETS:
+                yield kind, n, batch
 
 
 def cache_info() -> Dict[str, int]:

@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.checks import require_int_dtype as _require_int_dtype
 from repro.kernels import autotune
 from repro.kernels import coupling_kernel as _k
 from repro.kernels import ref as _ref
@@ -65,6 +66,7 @@ def _resolve_blocks(kind, b, m, n, block_b, block_i, block_k, k_minimum=8):
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
 def _coupling_sum_jit(w, sigma, *, use_pallas, block_b, block_i, block_k):
     TRACE_COUNTER["coupling_sum"] += 1
+    _require_int_dtype(w, "w")
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     m, n = w.shape
@@ -108,6 +110,8 @@ def coupling_sum(
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_i", "block_k"))
 def _onn_step_jit(w, sigma, bias, *, use_pallas, block_b, block_i, block_k):
     TRACE_COUNTER["onn_step"] += 1
+    _require_int_dtype(w, "w")
+    _require_int_dtype(bias, "bias")
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -151,6 +155,8 @@ def onn_step(
 )
 def _phase_step_jit(w, sigma, bias, phase, *, half, use_pallas, block_b, block_i, block_k):
     TRACE_COUNTER["phase_step"] += 1
+    _require_int_dtype(w, "w")
+    _require_int_dtype(bias, "bias")
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -207,6 +213,8 @@ def phase_step(
 )
 def _phase_step_packed_jit(w, bias, phase, *, half, use_pallas, block_b, block_i, block_k):
     TRACE_COUNTER["phase_step_packed"] += 1
+    _require_int_dtype(w, "w")
+    _require_int_dtype(bias, "bias")
     from repro.core.quantization import pack_phases  # local: avoid import cycle
 
     squeeze = phase.ndim == 1
@@ -275,6 +283,8 @@ def _phase_step_multi_jit(
     frozen_p2, freeze_cycle, *, half, chunk, max_cycles, packed, use_pallas, block_b
 ):
     TRACE_COUNTER["phase_step_multi"] += 1
+    _require_int_dtype(w, "w")
+    _require_int_dtype(bias, "bias")
     from repro.core.quantization import pack_phases, unpack_phases  # avoid cycle
 
     b, n = phase.shape
@@ -383,6 +393,7 @@ def phase_step_multi(
 )
 def _hybrid_coupling_sum_jit(w, sigma, *, parallel, use_pallas, block_b, block_i, block_k):
     TRACE_COUNTER["hybrid_coupling_sum"] += 1
+    _require_int_dtype(w, "w")
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     m, n = w.shape
@@ -436,6 +447,8 @@ def _hybrid_phase_step_jit(
     w, sigma, bias, phase, *, half, parallel, use_pallas, block_b, block_i, block_k
 ):
     TRACE_COUNTER["hybrid_phase_step"] += 1
+    _require_int_dtype(w, "w")
+    _require_int_dtype(bias, "bias")
     squeeze = sigma.ndim == 1
     batch_shape = sigma.shape[:-1]
     n = w.shape[0]
@@ -493,6 +506,7 @@ def hybrid_phase_step(
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b", "block_m", "block_k"))
 def _quantized_matvec_jit(w_q, scale, x, *, use_pallas, block_b, block_m, block_k):
     TRACE_COUNTER["quantized_matvec"] += 1
+    _require_int_dtype(w_q, "w_q")
     squeeze = x.ndim == 1
     batch_shape = x.shape[:-1]
     m, kdim = w_q.shape

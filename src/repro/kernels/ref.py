@@ -10,9 +10,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.checks import require_int_dtype
+
 
 def coupling_sum_ref(w: jax.Array, sigma: jax.Array) -> jax.Array:
     """S = σ Wᵀ: (B, N) int8 spins × (N, N) int8 weights → (B, N) int32."""
+    require_int_dtype(w, "w")
     return jnp.einsum(
         "ij,bj->bi",
         w.astype(jnp.int32),
@@ -25,7 +28,7 @@ def onn_step_ref(w: jax.Array, sigma: jax.Array, bias: jax.Array | None = None) 
     """Fused coupling sum + sign alignment: σ' = sign(S), ties keep σ."""
     s = coupling_sum_ref(w, sigma)
     if bias is not None:
-        s = s + bias.astype(jnp.int32)[None, :]
+        s = s + require_int_dtype(bias, "bias").astype(jnp.int32)[None, :]
     return jnp.where(s > 0, 1, jnp.where(s < 0, -1, sigma.astype(jnp.int32))).astype(
         jnp.int8
     )
@@ -45,7 +48,7 @@ def phase_step_ref(
     (phase ``half``), S == 0 keeps the current phase — the whole functional-
     mode oscillation cycle in one map.
     """
-    s = coupling_sum_ref(w, sigma) + bias.astype(jnp.int32)[None, :]
+    s = coupling_sum_ref(w, sigma) + require_int_dtype(bias, "bias").astype(jnp.int32)[None, :]
     return jnp.where(
         s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), phase.astype(jnp.int32))
     )
@@ -79,7 +82,9 @@ def hybrid_phase_step_ref(
     parallel: int,
 ) -> jax.Array:
     """Serialized-MAC coupling sum + the phase-align epilogue (int32 phases)."""
-    s = hybrid_coupling_sum_ref(w, sigma, parallel) + bias.astype(jnp.int32)[None, :]
+    s = hybrid_coupling_sum_ref(w, sigma, parallel) + require_int_dtype(
+        bias, "bias"
+    ).astype(jnp.int32)[None, :]
     return jnp.where(
         s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), phase.astype(jnp.int32))
     )
@@ -130,7 +135,9 @@ def phase_step_multi_ref(
     fc = freeze_cycle.astype(jnp.int32)
     for _ in range(chunk):
         sigma = jnp.where(ph < half, 1, -1).astype(jnp.int8)
-        s = coupling_sum_ref(w, sigma) + bias.astype(jnp.int32)[None, :]
+        s = coupling_sum_ref(w, sigma) + require_int_dtype(bias, "bias").astype(
+            jnp.int32
+        )[None, :]
         nph = jnp.where(s > 0, jnp.int32(0), jnp.where(s < 0, jnp.int32(half), ph))
         active = (fz == 0) & (t < max_cycles)
         not_first = t > 0

@@ -1,0 +1,5 @@
+"""RPL001 fixture: a baked-in literal seed outside tests/benchmarks."""
+
+import jax
+
+KEY = jax.random.PRNGKey(0)

@@ -1,0 +1,9 @@
+"""RPL002 fixture: one key consumed by two jax.random ops."""
+
+import jax
+
+
+def sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a + b

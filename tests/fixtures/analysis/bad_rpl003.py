@@ -1,0 +1,10 @@
+"""RPL003 fixture: an unbounded functools cache retaining jit executables."""
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def solver(n):
+    return jax.jit(lambda x: x * n)

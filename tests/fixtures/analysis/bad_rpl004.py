@@ -1,0 +1,11 @@
+"""RPL004 fixture: array-holding dataclass with the generated __eq__."""
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class Slab:
+    name: str
+    state: jax.Array

@@ -1,0 +1,9 @@
+"""RPL005 fixture: assert inside a jitted function."""
+
+import jax
+
+
+@jax.jit
+def step(x):
+    assert x.ndim == 2
+    return x * 2

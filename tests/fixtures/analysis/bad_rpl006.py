@@ -1,0 +1,10 @@
+"""RPL006 fixture: python branching on a traced operand."""
+
+import jax
+
+
+@jax.jit
+def clamp(x):
+    if x > 0:
+        return x
+    return -x

@@ -1,0 +1,7 @@
+"""RPL007 fixture: silent float truncation on a coupling matrix."""
+
+import jax.numpy as jnp
+
+
+def quantize(w):
+    return w.astype(jnp.int8)

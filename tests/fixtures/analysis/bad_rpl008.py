@@ -1,0 +1,12 @@
+"""RPL008 fixture: ambient read missing from the cache key."""
+
+from repro.distributed.sharding import current_mesh, current_rules
+
+
+def _plan_cache_key():
+    return (current_mesh(),)
+
+
+def tick(state):
+    rules = current_rules()
+    return state, rules

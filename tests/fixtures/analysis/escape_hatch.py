@@ -1,0 +1,6 @@
+"""Escape-hatch fixture: a deliberate violation, pragma-suppressed."""
+
+import jax
+
+# Demo determinism is the point here; the literal seed is intentional.
+KEY = jax.random.PRNGKey(0)  # repro-lint: disable=RPL001

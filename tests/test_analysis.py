@@ -1,0 +1,195 @@
+"""repro.analysis: linter rules, escape hatch, VMEM checker, tracegate.
+
+The linter fixtures under ``tests/fixtures/analysis`` are the executable
+spec of the rule set: one bad file per rule, each tripping *exactly* its
+own rule.  The tracegate tests run the pinned workload matrix in-process
+(``check_warm=False`` — earlier tests have already traced parts of the
+warm set, but steady-pass zeros are immune to jit-cache pollution) and
+prove the gate actually fails when a retrace is injected mid-window.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES
+from repro.analysis import core as lint_core
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "analysis"
+
+
+# ---------------------------------------------------------------------------
+# Linter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("code", sorted(RULES))
+def test_each_rule_trips_exactly_on_its_fixture(code):
+    path = FIXTURES / f"bad_{code.lower()}.py"
+    assert path.exists(), f"missing fixture for {code}"
+    findings, errors = lint_core.lint_paths([str(path)])
+    assert not errors
+    assert {f.code for f in findings} == {code}, [f.render() for f in findings]
+
+
+def test_escape_hatch_pragma_suppresses():
+    findings, errors = lint_core.lint_paths([str(FIXTURES / "escape_hatch.py")])
+    assert not errors
+    assert findings == []
+
+
+def test_escape_hatch_only_covers_named_rule(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n"
+        "KEY = jax.random.PRNGKey(0)  # repro-lint: disable=RPL005\n"
+    )
+    findings, _ = lint_core.lint_paths([str(bad)])
+    assert {f.code for f in findings} == {"RPL001"}
+
+
+def test_select_restricts_rules():
+    path = FIXTURES / "bad_rpl001.py"
+    findings, _ = lint_core.lint_paths([str(path)], select=["RPL002"])
+    assert findings == []
+    with pytest.raises(ValueError, match="unknown rule"):
+        lint_core.lint_paths([str(path)], select=["RPL999"])
+
+
+def test_clean_tree_lints_zero():
+    paths = [str(REPO_ROOT / d) for d in ("src", "tests", "benchmarks", "examples")]
+    findings, errors = lint_core.lint_paths(paths)
+    assert not errors
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_cli_exit_codes(capsys):
+    assert lint_core.main([str(FIXTURES / "bad_rpl001.py")]) == 1
+    assert lint_core.main([str(FIXTURES / "escape_hatch.py")]) == 0
+    out = capsys.readouterr().out
+    assert "RPL001" in out and "repro-lint: clean" in out
+
+
+# ---------------------------------------------------------------------------
+# Static VMEM checker
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_covers_every_bucket_within_budget():
+    from repro.analysis import vmem
+    from repro.kernels import autotune
+
+    reports = vmem.check_all()
+    assert len(reports) == sum(1 for _ in autotune.iter_buckets())
+    assert {r.kind for r in reports} == set(autotune.KINDS)
+    over = [r.render() for r in reports if not r.ok]
+    assert not over, over
+
+
+def test_vmem_report_flags_injected_budget_cut(monkeypatch):
+    from repro.analysis import vmem
+    from repro.kernels import autotune
+
+    monkeypatch.setattr(autotune, "MULTI_VMEM_BUDGET_BYTES", 1024)
+    saved_cache = dict(autotune._CACHE)
+    saved_counts = dict(autotune.TUNE_COUNTER)
+    try:
+        buf = io.StringIO()
+        failures = vmem.report(buf)
+        assert failures > 0
+        assert "OVER" in buf.getvalue()
+    finally:
+        # blocks_for caches tuples shrunk under the fake budget; drop them.
+        autotune._CACHE.clear()
+        autotune._CACHE.update(saved_cache)
+        autotune.TUNE_COUNTER.clear()
+        autotune.TUNE_COUNTER.update(saved_counts)
+
+
+def test_vmem_check_does_not_perturb_tune_counter():
+    from repro.analysis import vmem
+    from repro.kernels import autotune
+
+    before = dict(autotune.TUNE_COUNTER)
+    vmem.check_all()
+    assert dict(autotune.TUNE_COUNTER) == before
+
+
+def test_iter_buckets_multi_respects_kernel_ceiling():
+    from repro.kernels import autotune
+
+    multi = list(autotune.iter_buckets(("multi",)))
+    assert multi, "multi kind yielded no buckets"
+    for _, n, _ in multi:
+        assert -(-n // 128) * 128 <= autotune.MULTI_KERNEL_MAX_N
+    with pytest.raises(ValueError, match="unknown autotune kind"):
+        list(autotune.iter_buckets(("nope",)))
+
+
+# ---------------------------------------------------------------------------
+# Trace-budget gate
+# ---------------------------------------------------------------------------
+
+
+def test_tracegate_steady_flat_and_injected_retrace_detected():
+    from repro.analysis import tracegate
+
+    observed = tracegate.measure(smoke=True)
+    result = tracegate.run_gate(check_warm=False, observed=observed)
+    assert result.passed, result.diffs
+
+    injected = tracegate.measure(smoke=True, inject=True)
+    result = tracegate.run_gate(check_warm=False, observed=injected)
+    assert not result.passed
+    assert any("retrieve.steady" in d for d in result.diffs), result.diffs
+
+
+def test_tracegate_budget_file_matches_pinned_order():
+    from repro.analysis import tracegate
+
+    budget = tracegate.load_budget()
+    assert set(budget["workloads"]) == set(tracegate.WORKLOAD_ORDER)
+    for name, entry in budget["workloads"].items():
+        assert entry["steady"] == {}, f"{name} budgets a steady-state retrace"
+
+
+def test_tracegate_missing_or_broken_budget_is_actionable(tmp_path):
+    from repro.analysis import tracegate
+
+    with pytest.raises(FileNotFoundError, match="--update"):
+        tracegate.load_budget(tmp_path / "absent.json")
+    broken = tmp_path / "broken.json"
+    broken.write_text("{nope")
+    with pytest.raises(ValueError, match="--update"):
+        tracegate.load_budget(broken)
+
+
+# ---------------------------------------------------------------------------
+# Bench-regression gate exit codes
+# ---------------------------------------------------------------------------
+
+
+def test_check_regression_distinct_exit_for_bad_baselines(tmp_path, capsys):
+    from benchmarks import check_regression as cr
+
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    (fresh / "BENCH_kernels.json").write_text(json.dumps({"rows": []}))
+    base = tmp_path / "base"
+    base.mkdir()
+    args = ["--benches", "kernels", "--fresh-dir", str(fresh),
+            "--baseline-dir", str(base)]
+
+    rc = cr.main(args)
+    assert rc == cr.EXIT_BASELINE
+    assert "--update" in capsys.readouterr().err
+
+    (base / "BENCH_kernels.json").write_text("{not json")
+    rc = cr.main(args)
+    assert rc == cr.EXIT_BASELINE
+    assert "unreadable" in capsys.readouterr().err

@@ -20,14 +20,15 @@ B, S = 2, 64
 
 
 def _batch(cfg, key):
-    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab, dtype=jnp.int32)
+    k_tok, k_vis, k_frames = (jax.random.fold_in(key, i) for i in range(3))
+    tokens = jax.random.randint(k_tok, (B, S), 0, cfg.vocab, dtype=jnp.int32)
     batch = {"tokens": tokens, "labels": tokens}
     if cfg.family == "vlm":
         batch["vision"] = jax.random.normal(
-            key, (B, cfg.n_vision_tokens, cfg.vision_dim), jnp.bfloat16
+            k_vis, (B, cfg.n_vision_tokens, cfg.vision_dim), jnp.bfloat16
         )
     if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+        batch["frames"] = jax.random.normal(k_frames, (B, S, cfg.d_model), jnp.bfloat16)
     return batch
 
 

@@ -284,9 +284,10 @@ def test_check_regression_end_to_end_exit_codes(tmp_path):
     assert cr.main(args) == 0
     (fresh_dir / "BENCH_dynamics.json").write_text(json.dumps(_payload(0.02, 0.001)))
     assert cr.main(args) == 1
-    # missing baseline is a hard failure, not a silent pass
+    # missing baseline is a hard failure with its own exit code — "regenerate
+    # the baseline" is a different fix than "chase a regression"
     (base_dir / "BENCH_dynamics.json").unlink()
-    assert cr.main(args) == 1
+    assert cr.main(args) == cr.EXIT_BASELINE
     # --update writes the fresh result as the new baseline
     assert cr.main(args + ["--update"]) == 0
     assert json.loads((base_dir / "BENCH_dynamics.json").read_text())["rows"]
